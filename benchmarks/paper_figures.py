@@ -1,0 +1,319 @@
+"""One benchmark per paper table/figure (DESIGN.md §8 index).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+``us_per_call`` is the modeled per-request/step service time in
+microseconds where meaningful; ``derived`` carries the figure's headline
+quantity (ratios, fractions, counts).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import numpy as np
+
+from common import (WORKLOADS, af_labels, devices_for, pd_labels,
+                    plan_from_labels, request_graph)
+from repro.core import planner
+from repro.core.costmodel import CATALOG, PAPER_PAIRS, graph_time_on
+from repro.core.monitor import MonitorConfig, OnlineMonitor
+from repro.core.simulator import simulate_offline, simulate_online
+
+Row = Tuple[str, float, str]
+
+N_REQ = 48
+PAIR_MAIN = ("a100", "l40s")
+
+
+# ===================================================================== #
+# Fig 2: kernel heterogeneity (CDF of ratios + time-weighted share)
+# ===================================================================== #
+def fig2_kernel_heterogeneity() -> List[Row]:
+    rows: List[Row] = []
+    a, b = devices_for(PAIR_MAIN)
+    for tag, arch in WORKLOADS.items():
+        g = request_graph(arch)
+        ratios = []
+        t_a_total = 0.0
+        t_faster_on_b = 0.0
+        for n in g.nodes:
+            ta, tb = a.kernel_time(n), b.kernel_time(n)
+            ratios.append(tb / ta)
+            t_a_total += ta
+            if tb < ta:
+                t_faster_on_b += ta
+        frac_count = float(np.mean(np.array(ratios) < 1.0))
+        frac_time = t_faster_on_b / t_a_total
+        rows.append((f"fig2.{tag}.kernels_faster_on_l40s_count",
+                     0.0, f"{frac_count:.3f}"))
+        rows.append((f"fig2.{tag}.time_weighted_share",
+                     t_a_total * 1e6, f"{frac_time:.3f}"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 3: phase- and block-grouped kernel preferences (GPT-oss)
+# ===================================================================== #
+def fig3_phase_block() -> List[Row]:
+    rows: List[Row] = []
+    a, b = devices_for(PAIR_MAIN)
+    g = request_graph(WORKLOADS["GT"])
+    for group_by, keys in (("phase", ("prefill", "decode")),
+                           ("block", ("attention", "moe", "ffn"))):
+        for key in keys:
+            nodes = [n for n in g.nodes
+                     if getattr(n, group_by) == key]
+            if not nodes:
+                continue
+            frac = float(np.mean([b.kernel_time(n) < a.kernel_time(n)
+                                  for n in nodes]))
+            rows.append((f"fig3.{group_by}.{key}.frac_faster_l40s",
+                         0.0, f"{frac:.3f}"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 6 + Table III: offline throughput & cost efficiency
+# ===================================================================== #
+def fig6_offline_throughput() -> List[Row]:
+    rows: List[Row] = []
+    for pair in PAPER_PAIRS:
+        devs = devices_for(pair)
+        price = devs[0].price + devs[1].price
+        for tag, arch in WORKLOADS.items():
+            g = request_graph(arch)
+            results = {}
+            # homogeneous baselines (single device serves everything)
+            for i, d in enumerate(devs):
+                t = graph_time_on(g, d)
+                results[f"homo_{d.name}"] = 1.0 / t
+            # Tessera: kernel-granularity plan + pipelined DES
+            plan = planner.plan(g, devs, policy="throughput")
+            sim = simulate_offline(g, plan, devs, num_requests=N_REQ)
+            results["tessera"] = sim.throughput
+            # PD / AF coarse baselines, best device assignment
+            for name, lblfn in (("pd", pd_labels), ("af", af_labels)):
+                best = None
+                for flip in (False, True):
+                    lbl = lblfn(g, int(flip), int(not flip))
+                    if lbl is None:
+                        break
+                    p = plan_from_labels(g, lbl, devs, name)
+                    s = simulate_offline(g, p, devs, num_requests=N_REQ)
+                    best = max(best or 0.0, s.throughput)
+                results[name] = best       # None = inapplicable (red X)
+            base = results["tessera"]
+            for name, thr in results.items():
+                if thr is None:
+                    rows.append((f"fig6.{pair[0]}+{pair[1]}.{tag}.{name}",
+                                 0.0, "inapplicable"))
+                    continue
+                rows.append((f"fig6.{pair[0]}+{pair[1]}.{tag}.{name}",
+                             1e6 / thr, f"{thr:.3f}req/s"))
+            for name in ("pd", "af"):
+                if results.get(name):
+                    rows.append(
+                        (f"fig6.{pair[0]}+{pair[1]}.{tag}."
+                         f"tessera_over_{name}", 0.0,
+                         f"{base / results[name]:.2f}x"))
+            # Table III: Perf/$ normalized to homogeneous left
+            left = results[f"homo_{devs[0].name}"] / devs[0].price
+            rows.append((f"tab3.{pair[0]}+{pair[1]}.{tag}."
+                         f"tessera_perf_per_dollar", 0.0,
+                         f"{(base / price) / left:.3f}"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 7: online normalized latency vs request rate
+# ===================================================================== #
+def fig7_online_latency() -> List[Row]:
+    rows: List[Row] = []
+    arch = WORKLOADS["GT"]
+    g = request_graph(arch)
+    devs = devices_for(PAIR_MAIN)
+    p_thr = planner.plan(g, devs, policy="throughput")
+    p_lat = planner.plan(g, devs, policy="latency")
+    base = p_lat.unpipelined_latency
+    for rate_x in (0.2, 0.5, 0.8, 1.1):
+        rate = rate_x / base
+        for name, plans in (("tessera_lat", {"latency": p_lat}),
+                            ("tessera_thr", {"latency": p_thr})):
+            sim = simulate_online(g, plans, devs, rate=rate,
+                                  num_requests=80,
+                                  iters_per_request=1)
+            rows.append((f"fig7.rate{rate_x}.{name}",
+                         sim.mean_latency * 1e6,
+                         f"p90={sim.p(0.9) * 1e3:.2f}ms"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 8: cluster scale — 3-GPU asymmetric MILP + TP-composed pairs
+# ===================================================================== #
+def fig8_cluster_scale() -> List[Row]:
+    rows: List[Row] = []
+    g = request_graph(WORKLOADS["GT"])
+    devs3 = [CATALOG["a100"], CATALOG["a100"], CATALOG["l40s"]]
+    plan3 = planner.plan(g, devs3, policy="throughput")
+    sim3 = simulate_offline(g, plan3, devs3, num_requests=N_REQ)
+    rows.append(("fig8.2a100+1l40s.tessera", 1e6 / sim3.throughput,
+                 f"{sim3.throughput:.3f}req/s"))
+    # PD on 3 GPUs: prefill -> l40s, decode -> each a100
+    lbl = pd_labels(g, prefill_dev=2, decode_dev=0)
+    p = plan_from_labels(g, lbl, devs3, "pd")
+    simp = simulate_offline(g, p, devs3, num_requests=N_REQ)
+    rows.append(("fig8.2a100+1l40s.pd", 1e6 / simp.throughput,
+                 f"{sim3.throughput / simp.throughput:.2f}x_tessera"))
+    # TP-composed heterogeneous pairs (B200+H100) x 8: per-pair plan,
+    # collectives stay on the homogeneous group (paper §IV).
+    pair = devices_for(("b200", "h100"))
+    plan_pair = planner.plan(g, pair, policy="throughput")
+    simpair = simulate_offline(g, plan_pair, pair, num_requests=N_REQ)
+    rows.append(("fig8.8x(b200+h100).tessera_per_pair",
+                 1e6 / simpair.throughput,
+                 f"aggregate={simpair.throughput * 8:.3f}req/s"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 9: pipelined request processing ablation
+# ===================================================================== #
+def fig9_pipeline_ablation() -> List[Row]:
+    rows: List[Row] = []
+    g = request_graph(WORKLOADS["GT"])
+    devs = devices_for(PAIR_MAIN)
+    plan = planner.plan(g, devs, policy="throughput")
+    opt = plan.steady_state_throughput
+    for name, kw in (("none", dict(pipelined=False)),
+                     ("naive", dict(scheduling="fifo")),
+                     ("priority", dict(scheduling="priority"))):
+        sim = simulate_offline(g, plan, devs, num_requests=N_REQ, **kw)
+        rows.append((f"fig9.{name}", 1e6 / sim.throughput,
+                     f"{sim.throughput / opt:.3f}of_optimal"))
+        # Fig 9b: time breakdown on the bottleneck device
+        bdev = int(np.argmax(plan.T))
+        busy = sim.busy_fraction(bdev)
+        rows.append((f"fig9b.{name}.bottleneck_busy", 0.0,
+                     f"{busy:.3f}"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 10: online monitor sensitivity (W, beta)
+# ===================================================================== #
+def fig10_monitor_sensitivity() -> List[Row]:
+    rows: List[Row] = []
+    g = request_graph(WORKLOADS["GT"], layers=2)
+    devs = devices_for(PAIR_MAIN)
+    p_thr = planner.plan(g, devs, policy="throughput")
+    p_lat = planner.plan(g, devs, policy="latency")
+    plans = {"latency": p_lat, "throughput": p_thr}
+    base = p_lat.unpipelined_latency
+    rate = 1.5 / base
+    for W_ms in (30, 300, 1500):
+        mon = OnlineMonitor(MonitorConfig(window=W_ms / 1e3, beta=1.5))
+        sim = simulate_online(g, plans, devs, rate=rate,
+                              num_requests=150, monitor=mon)
+        rows.append((f"fig10.W{W_ms}ms", sim.mean_latency * 1e6,
+                     f"switches={sim.switches}"))
+    for beta in (1.1, 1.5, 3.0):
+        mon = OnlineMonitor(MonitorConfig(window=0.3, beta=beta))
+        sim = simulate_online(g, plans, devs, rate=rate,
+                              num_requests=150, monitor=mon)
+        rows.append((f"fig10.beta{beta}", sim.mean_latency * 1e6,
+                     f"switches={sim.switches}"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 11a: robustness to slow interconnect
+# ===================================================================== #
+def fig11a_bandwidth() -> List[Row]:
+    rows: List[Row] = []
+    g = request_graph(WORKLOADS["GT"])
+    devs = devices_for(PAIR_MAIN)
+    thr200 = None
+    for gbps in (200, 100, 50, 25):
+        bw = gbps / 8 * 1e9
+        plan = planner.plan(g, devs, policy="throughput",
+                            bw_override=bw)
+        sim = simulate_offline(g, plan, devs, num_requests=N_REQ,
+                               bw_override=bw)
+        thr200 = thr200 or sim.throughput
+        rows.append((f"fig11a.offline.{gbps}gbps",
+                     1e6 / sim.throughput,
+                     f"{sim.throughput / thr200:.3f}of_200gbps"))
+        pl = planner.plan(g, devs, policy="latency", bw_override=bw)
+        rows.append((f"fig11a.latpolicy.{gbps}gbps.cut_edges", 0.0,
+                     f"{pl.cut_edges}"))
+    # graceful degeneration: ~zero bandwidth -> single device, no cliff
+    p0 = planner.plan(g, devs, policy="latency", bw_override=1e3)
+    t_single = min(graph_time_on(g, d) for d in devs)
+    rows.append(("fig11a.degenerate.single_device_gap", 0.0,
+                 f"{p0.objective / t_single:.3f}x"))
+    return rows
+
+
+# ===================================================================== #
+# Fig 11b: planner scalability (+ layer folding)
+# ===================================================================== #
+def fig11b_planner_scaling() -> List[Row]:
+    import sys as _sys
+    _sys.path.insert(0, str(Path(__file__).resolve().parents[1] /
+                            "tests"))
+    from conftest import random_dag
+    rows: List[Row] = []
+    devs = devices_for(PAIR_MAIN)
+    for n in (200, 500, 1000, 1500):
+        g = random_dag(n, seed=1, p=min(0.02, 40.0 / n))
+        t0 = time.perf_counter()
+        planner.plan(g, devs, policy="latency", cache=False)
+        dt_lat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        planner.plan(g, devs, policy="throughput", cache=False,
+                     anneal_iters=1000)
+        dt_thr = time.perf_counter() - t0
+        rows.append((f"fig11b.K{n}.latency_mincut", dt_lat * 1e6,
+                     f"{dt_lat * 1e3:.1f}ms"))
+        rows.append((f"fig11b.K{n}.throughput_heuristic", dt_thr * 1e6,
+                     f"{dt_thr * 1e3:.1f}ms"))
+    for nG in (2, 3, 4):
+        devs_n = [CATALOG[n] for n in
+                  ("a100", "l40s", "h100", "rtxpro6000")][:nG]
+        g = random_dag(500, seed=2, p=0.02)
+        t0 = time.perf_counter()
+        planner.plan(g, devs_n, policy="latency", cache=False)
+        dt = time.perf_counter() - t0
+        rows.append((f"fig11b.G{nG}.latency", dt * 1e6,
+                     f"{dt * 1e3:.1f}ms"))
+    # layer folding speedup on a real layered model graph
+    g = request_graph(WORKLOADS["LM"], layers=8)
+    t0 = time.perf_counter()
+    planner.plan(g, devs, policy="throughput", cache=False,
+                 use_folding=False, anneal_iters=1000)
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    planner.plan(g, devs, policy="throughput", cache=False,
+                 use_folding=True, anneal_iters=1000)
+    t_fold = time.perf_counter() - t0
+    rows.append(("fig11b.folding_speedup", t_fold * 1e6,
+                 f"{t_full / max(t_fold, 1e-9):.2f}x"))
+    return rows
+
+
+ALL_FIGURES = [
+    fig2_kernel_heterogeneity,
+    fig3_phase_block,
+    fig6_offline_throughput,
+    fig7_online_latency,
+    fig8_cluster_scale,
+    fig9_pipeline_ablation,
+    fig10_monitor_sensitivity,
+    fig11a_bandwidth,
+    fig11b_planner_scaling,
+]

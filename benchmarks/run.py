@@ -1,0 +1,64 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  Kernel
+micro-benchmarks (wall time of the jitted CPU reference ops) are included
+for completeness; the paper-figure numbers are cost-model + DES driven
+(no heterogeneous hardware in this container — DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+
+def _kernel_micro():
+    """Wall-clock micro-bench of the jitted reference ops on CPU."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    def bench(fn, *args, iters=5):
+        fn_j = jax.jit(fn)
+        jax.block_until_ready(fn_j(*args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn_j(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    us = bench(lambda q: attention_ref(q, q, q, causal=True), q)
+    rows.append(("micro.attention_ref.s512", us, "cpu_wall"))
+
+    xh = jax.random.normal(key, (1, 256, 4, 32))
+    B_ = jax.random.normal(key, (1, 256, 16))
+    al = -jax.nn.softplus(jax.random.normal(key, (1, 256, 4)))
+    us = bench(lambda a, b, c: ssd_ref(a, b, c, al)[0], xh, B_, B_)
+    rows.append(("micro.ssd_ref.s256", us, "cpu_wall"))
+    return rows
+
+
+def main() -> None:
+    from paper_figures import ALL_FIGURES
+
+    print("name,us_per_call,derived")
+    for row in _kernel_micro():
+        print(f"{row[0]},{row[1]:.2f},{row[2]}")
+    for fig in ALL_FIGURES:
+        t0 = time.perf_counter()
+        rows = fig()
+        dt = time.perf_counter() - t0
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+        print(f"_timing.{fig.__name__},{dt * 1e6:.0f},harness_wall")
+
+
+if __name__ == "__main__":
+    main()

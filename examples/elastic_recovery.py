@@ -1,0 +1,43 @@
+"""Kernel-granularity elasticity: lose a device, re-plan, keep serving.
+
+  PYTHONPATH=src python examples/elastic_recovery.py
+
+PD/AF disaggregation must re-provision a whole phase/block pool on node
+loss; Tessera just re-solves kernel placement over the survivors.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.core import analyzer
+from repro.core.costmodel import GPU_A100, GPU_H100, GPU_L40S
+from repro.models import model as M
+from repro.runtime.fault import ElasticExecutor
+
+cfg = dataclasses.replace(configs.get_smoke("qwen3_1_7b"),
+                          dtype="float32")
+params = M.init_params(cfg)
+toks = jnp.zeros((2, 8), jnp.int32)
+
+def fwd(p, t):
+    return M.forward_logits(p, cfg, t, scan_layers=False)
+
+traced = analyzer.analyze(fwd, params, toks)
+exe = ElasticExecutor(traced, [GPU_A100, GPU_L40S, GPU_H100],
+                      jax.devices())
+want = np.asarray(jax.jit(fwd)(params, toks))
+print("3 devices:", exe.plan.summary())
+np.testing.assert_allclose(np.asarray(exe(params, toks)), want,
+                           rtol=1e-5)
+exe.mark_failed(2)          # lose the H100
+print("2 devices:", exe.plan.summary())
+np.testing.assert_allclose(np.asarray(exe(params, toks)), want,
+                           rtol=1e-5)
+exe.mark_failed(1)          # lose the L40s too
+print("1 device :", exe.plan.summary())
+np.testing.assert_allclose(np.asarray(exe(params, toks)), want,
+                           rtol=1e-5)
+print(f"elastic re-plans: {exe.replans}; output identical throughout")

@@ -1,0 +1,57 @@
+"""Quickstart: Tessera's full pipeline on a real model in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. trace a model's decode step into a kernel graph (exact RAW deps),
+2. inspect kernel heterogeneity across a heterogeneous device pair,
+3. plan placement (throughput + latency policies),
+4. execute disaggregated and verify against single-device execution.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.core import analyzer, planner
+from repro.core.costmodel import GPU_A100, GPU_L40S
+from repro.core.executor import build_executable
+from repro.models import model as M
+
+cfg = dataclasses.replace(configs.get_smoke("llama3_8b"), dtype="float32")
+params = M.init_params(cfg)
+cache = M.init_cache(cfg, batch=2, max_len=32)
+toks = jnp.array([[5], [9]], jnp.int32)
+pos = jnp.array([3, 7], jnp.int32)
+
+def step(p, c, t, q):
+    return M.decode_step(p, cfg, t, c, q, scan_layers=False)
+
+# 1. analyze ---------------------------------------------------------- #
+traced = analyzer.analyze(step, params, cache, toks, pos,
+                          state_argnums=(1,))
+print("kernel graph:", traced.graph.stats())
+
+# 2. heterogeneity ---------------------------------------------------- #
+devs = [GPU_A100, GPU_L40S]
+faster_on_b = sum(devs[1].kernel_time(n) < devs[0].kernel_time(n)
+                  for n in traced.graph.nodes)
+print(f"{faster_on_b}/{len(traced.graph)} kernels faster on "
+      f"{devs[1].name} (paper Fig. 2)")
+
+# 3. plan (pin KV-touching kernels to the cache's home device) -------- #
+g = analyzer.pin_nodes(traced.graph,
+                       traced.state_readers | traced.state_writers, 0)
+for policy in ("throughput", "latency"):
+    plan = planner.plan(g, devs, policy=policy, cache=False)
+    print(plan.summary())
+
+# 4. execute disaggregated and verify --------------------------------- #
+plan = planner.plan(g, devs, policy="throughput", cache=False)
+exe = build_executable(traced.with_graph(g), plan)
+logits, new_cache = exe(params, cache, toks, pos)
+ref_logits, _ = jax.jit(step)(params, cache, toks, pos)
+np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                           rtol=1e-5, atol=1e-5)
+print("disaggregated == single-device: OK")

@@ -1,0 +1,136 @@
+"""Checkpointing: atomic, async, restart-safe.
+
+Layout:  <dir>/step_<N>/   arrays.npz  manifest.json
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a
+half-written checkpoint can never be mistaken for a complete one (the
+crash-restart test exercises exactly this).  ``save_async`` offloads
+serialization to a background thread so the train loop never blocks on
+disk; ``latest_step``/``restore`` implement auto-resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = arrays[key]
+        target_dtype = getattr(leaf, "dtype", arr.dtype)
+        leaves.append(np.asarray(arr).astype(target_dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._errors: List[BaseException] = []
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state: Any,
+             extra: Optional[Dict] = None) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        arrays = _flatten(state)
+        # bf16 has no numpy dtype: store raw bits + dtype tag
+        np.savez(tmp / "arrays.npz", **{
+            k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+            for k, v in arrays.items()})
+        dtypes = {k: v.dtype.name for k, v in arrays.items()}
+        manifest = {"step": step, "time": time.time(),
+                    "dtypes": dtypes, "extra": extra or {}}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, state: Any,
+                   extra: Optional[Dict] = None) -> None:
+        # snapshot to host memory synchronously (cheap), write async
+        arrays_host = jax.tree_util.tree_map(np.asarray, state)
+        self.wait()
+
+        def work():
+            try:
+                self.save(step, arrays_host, extra)
+            except BaseException as e:       # surfaced by wait()
+                self._errors.append(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._errors:
+            raise self._errors.pop()
+
+    # ------------------------------------------------------------------ #
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Any,
+                step: Optional[int] = None) -> Tuple[int, Any]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        raw = dict(np.load(d / "arrays.npz"))
+        import jax.numpy as jnp
+        arrays = {}
+        for k, v in raw.items():
+            if manifest["dtypes"].get(k) == "bfloat16":
+                arrays[k] = jnp.asarray(v.view(np.uint16)).view(
+                    jnp.bfloat16)
+            else:
+                arrays[k] = v
+        return step, _unflatten(template, arrays)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)

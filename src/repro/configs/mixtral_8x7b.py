@@ -1,0 +1,20 @@
+"""mixtral-8x7b [arXiv:2401.04088; hf] — 8-expert top-2 MoE with SWA.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, sliding window.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=32000,
+    num_experts=8, experts_per_token=2,
+    sliding_window=4096, rope_theta=1e6,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="mixtral-smoke", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=256, num_experts=4,
+    experts_per_token=2, sliding_window=16, head_dim=0)

@@ -1,0 +1,28 @@
+# Tessera core: kernel-granularity disaggregation for heterogeneous
+# accelerators, adapted from the paper's CUDA implementation to JAX/TPU.
+#
+#   analyzer   — jaxpr -> KernelGraph (exact RAW deps; replaces PTX pass)
+#   costmodel  — device catalog + roofline kernel latency
+#   planner    — latency (exact min-cut) / throughput (makespan) policies
+#   executor   — per-device staged jitted execution with explicit transfers
+#   pipeline   — multi-request pipelining with priority aging + stragglers
+#   monitor    — queueing-aware online policy switching
+#   simulator  — discrete-event model for the paper's perf experiments
+
+from repro.core.analyzer import TracedGraph, analyze, pin_nodes
+from repro.core.costmodel import (CATALOG, DeviceSpec, PAPER_PAIRS,
+                                  TPU_PAIRS, cost_matrix)
+from repro.core.executor import StagedExecutable, build_executable
+from repro.core.graph import KernelGraph, KernelNode
+from repro.core.monitor import MonitorConfig, OnlineMonitor
+from repro.core.pipeline import PipelinedRunner
+from repro.core.planner import Plan, Stage, plan, replan_on_failure
+from repro.core.simulator import SimResult, simulate_offline, simulate_online
+
+__all__ = [
+    "TracedGraph", "analyze", "pin_nodes", "CATALOG", "DeviceSpec",
+    "PAPER_PAIRS", "TPU_PAIRS", "cost_matrix", "StagedExecutable",
+    "build_executable", "KernelGraph", "KernelNode", "MonitorConfig",
+    "OnlineMonitor", "PipelinedRunner", "Plan", "Stage", "plan",
+    "replan_on_failure", "SimResult", "simulate_offline", "simulate_online",
+]

@@ -1,0 +1,70 @@
+"""Region markers: identity primitives that tag jaxpr regions.
+
+The paper's analyzer knows each kernel's phase/block from the CUDA launch
+site; in JAX we thread a zero-cost identity primitive through the traced
+value so the analyzer can recover ``phase`` / ``block`` / ``layer`` tags
+from the equation stream.  Markers lower to a no-op and are removed from
+the kernel graph (edges re-routed through them).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.interpreters import ad, batching, mlir
+
+import jax.extend.core as jex_core
+
+region_p = jex_core.Primitive("tessera_region")
+region_p.def_impl(lambda x, *, kind, phase, block, layer: x)
+region_p.def_abstract_eval(lambda x, *, kind, phase, block, layer: x)
+mlir.register_lowering(region_p,
+                       lambda ctx, x, *, kind, phase, block, layer: [x])
+
+# Differentiation / vmap pass-through so markers can live inside train_step.
+ad.deflinear2(region_p,
+              lambda ct, x, *, kind, phase, block, layer: [ct])
+batching.primitive_batchers[region_p] = (
+    lambda args, dims, *, kind, phase, block, layer:
+    (region_p.bind(args[0], kind=kind, phase=phase, block=block,
+                   layer=layer), dims[0]))
+
+MARKER_NAME = region_p.name
+
+
+def _bind(x, kind: str, phase: str, block: str, layer: int):
+    return region_p.bind(x, kind=kind, phase=phase, block=block, layer=layer)
+
+
+@contextlib.contextmanager
+def region(x_ref: list, *, phase: str = "", block: str = "",
+           layer: int = -1):
+    """Context-manager form: ``with region([x], block="attention") as ref:``
+
+    The traced value must be threaded through the markers to anchor them in
+    the equation stream; the single-element list is mutated in place.
+    """
+    x_ref[0] = _bind(x_ref[0], "begin", phase, block, layer)
+    yield x_ref
+    x_ref[0] = _bind(x_ref[0], "end", phase, block, layer)
+
+
+def tag(x, *, phase: str = "", block: str = "", layer: int = -1):
+    """Functional form: returns (begin-marked value, closer function)."""
+    y = _bind(x, "begin", phase, block, layer)
+
+    def close(z):
+        return _bind(z, "end", phase, block, layer)
+
+    return y, close
+
+
+def wrap(fn, *, phase: str = "", block: str = "", layer: int = -1):
+    """Wrap ``fn(x, *rest) -> y`` so its kernels carry the given tags."""
+    def wrapped(x, *rest, **kw):
+        x = _bind(x, "begin", phase, block, layer)
+        y = fn(x, *rest, **kw)
+        return _bind(y, "end", phase, block, layer)
+    return wrapped

@@ -1,0 +1,276 @@
+"""Exact latency-policy placement via min s-t cut (and alpha-expansion).
+
+The paper solves its latency objective
+
+    min  sum_k t_{k,g(k)}  +  sum_{(i,j) in E, g(i) != g(j)} c_ij
+
+with a generic MILP (Gurobi).  For |G| = 2 this objective is exactly the
+energy of a binary labeling with additive unary terms and submodular
+pairwise terms, so the *global optimum* is a minimum s-t cut — solved here
+with Dinic's algorithm in O(E sqrt(V)).  For |G| > 2 we use alpha-expansion
+(repeated binary cuts), which carries strong approximation guarantees for
+metric pairwise costs and matches the exact optimum on every small random
+instance in our tests.
+
+This is both faster and stronger than the paper's formulation for the
+2-device case that dominates its evaluation (heterogeneous GPU pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import KernelGraph
+
+INF = float("inf")
+
+
+class Dinic:
+    """Max-flow/min-cut with float capacities."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.to: List[int] = []
+        self.cap: List[float] = []
+        self.head: List[List[int]] = [[] for _ in range(n)]
+
+    def add_edge(self, u: int, v: int, c: float, rc: float = 0.0) -> None:
+        self.head[u].append(len(self.to))
+        self.to.append(v)
+        self.cap.append(c)
+        self.head[v].append(len(self.to))
+        self.to.append(u)
+        self.cap.append(rc)
+
+    def _bfs(self, s: int, t: int) -> bool:
+        self.level = [-1] * self.n
+        self.level[s] = 0
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and self.level[v] < 0:
+                    self.level[v] = self.level[u] + 1
+                    q.append(v)
+        return self.level[t] >= 0
+
+    def _dfs(self, u: int, t: int, f: float) -> float:
+        if u == t:
+            return f
+        while self.it[u] < len(self.head[u]):
+            eid = self.head[u][self.it[u]]
+            v = self.to[eid]
+            if self.cap[eid] > 1e-12 and self.level[v] == self.level[u] + 1:
+                d = self._dfs(v, t, min(f, self.cap[eid]))
+                if d > 1e-12:
+                    self.cap[eid] -= d
+                    self.cap[eid ^ 1] += d
+                    return d
+            self.it[u] += 1
+        return 0.0
+
+    def max_flow(self, s: int, t: int) -> float:
+        flow = 0.0
+        while self._bfs(s, t):
+            self.it = [0] * self.n
+            while True:
+                f = self._dfs(s, t, INF)
+                if f <= 1e-12:
+                    break
+                flow += f
+        return flow
+
+    def min_cut_side(self, s: int) -> List[bool]:
+        """After max_flow: True = reachable from s in residual (label 0)."""
+        seen = [False] * self.n
+        seen[s] = True
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 1e-12 and not seen[v]:
+                    seen[v] = True
+                    q.append(v)
+        return seen
+
+
+# --------------------------------------------------------------------- #
+def solve_latency_2dev(unary: Sequence[Sequence[float]],
+                       pair: Dict[Tuple[int, int], Tuple[float, float]],
+                       pins: Optional[Dict[int, int]] = None
+                       ) -> Tuple[List[int], float]:
+    """Globally optimal binary placement.
+
+    unary[k] = (t_k on dev0, t_k on dev1)
+    pair[(i, j)] = (cost if i on 0 and j on 1, cost if i on 1 and j on 0)
+    pins: node -> forced device.
+    Returns (labels, objective).
+    """
+    n = len(unary)
+    s, t = n, n + 1
+    g = Dinic(n + 2)
+    for k, (t0, t1) in enumerate(unary):
+        # label 0 (source side) pays t0 via cut of k->t; label 1 pays t1.
+        g.add_edge(s, k, float(t1))
+        g.add_edge(k, t, float(t0))
+    if pins:
+        for k, d in pins.items():
+            if d == 0:
+                g.add_edge(s, k, INF)
+            else:
+                g.add_edge(k, t, INF)
+    for (i, j), (c01, c10) in pair.items():
+        if c01 > 0:
+            g.add_edge(i, j, float(c01))
+        if c10 > 0:
+            g.add_edge(j, i, float(c10))
+    g.max_flow(s, t)
+    side = g.min_cut_side(s)
+    labels = [0 if side[k] else 1 for k in range(n)]
+    obj = _energy(labels, unary, pair)
+    return labels, obj
+
+
+def _energy(labels, unary, pair) -> float:
+    e = sum(unary[k][labels[k]] for k in range(len(labels)))
+    for (i, j), (c01, c10) in pair.items():
+        if labels[i] == labels[j]:
+            continue
+        e += c01 if labels[i] == 0 else c10
+    return e
+
+
+# --------------------------------------------------------------------- #
+def solve_latency_multi(unary: Sequence[Sequence[float]],
+                        pair_cost,  # (i, j, gi, gj) -> float
+                        num_devices: int,
+                        pins: Optional[Dict[int, int]] = None,
+                        max_rounds: int = 8) -> Tuple[List[int], float]:
+    """Alpha-expansion for |G| > 2 latency placement.
+
+    ``pair_cost(i, j, gi, gj)`` must be 0 when gi == gj and satisfy the
+    (approximate) metric property; transfer costs l + d/bw do.
+    """
+    n = len(unary)
+    pins = pins or {}
+    labels = [pins.get(k, min(range(num_devices), key=lambda g: unary[k][g]))
+              for k in range(n)]
+
+    def total(ls):
+        e = sum(unary[k][ls[k]] for k in range(n))
+        for (i, j) in pair_keys:
+            e += pair_cost(i, j, ls[i], ls[j])
+        return e
+
+    pair_keys = list(_pair_keys_from(pair_cost))
+
+    best = total(labels)
+    for _ in range(max_rounds):
+        improved = False
+        for alpha in range(num_devices):
+            new_labels, new_e = _expand(labels, alpha, unary, pair_cost,
+                                        pair_keys, pins)
+            if new_e < best - 1e-12:
+                labels, best = new_labels, new_e
+                improved = True
+        if not improved:
+            break
+    return labels, best
+
+
+def _pair_keys_from(pair_cost):
+    keys = getattr(pair_cost, "edges", None)
+    if keys is None:
+        raise ValueError("pair_cost must expose .edges (list of (i, j))")
+    return keys
+
+
+def _expand(labels, alpha, unary, pair_cost, pair_keys, pins):
+    """One alpha-expansion move: each node keeps its label (0) or
+    switches to alpha (1).  Kolmogorov-Zabih construction."""
+    n = len(labels)
+    s, t = n, n + 1
+    g = Dinic(n + 2)
+    const = 0.0
+    # unary: label 0 = keep -> cost unary[k][labels[k]]
+    #        label 1 = alpha -> cost unary[k][alpha]
+    u0 = [unary[k][labels[k]] for k in range(n)]
+    u1 = [unary[k][alpha] for k in range(n)]
+    for k, d in (pins or {}).items():
+        if d == alpha:
+            u0[k] = INF       # must switch (already alpha => keep==switch)
+            if labels[k] == alpha:
+                u0[k] = u1[k]
+        else:
+            u1[k] = INF       # may not switch to alpha
+    add0 = [0.0] * n
+    add1 = [0.0] * n
+    for (i, j) in pair_keys:
+        li, lj = labels[i], labels[j]
+        t00 = pair_cost(i, j, li, lj)
+        t01 = pair_cost(i, j, li, alpha)
+        t10 = pair_cost(i, j, alpha, lj)
+        t11 = 0.0
+        # E(xi,xj) = t00 + xi(t10-t00) + xj(t11-t10) + (1-xi)xj*(t01+t10-t00-t11)
+        const += t00
+        add1[i] += t10 - t00
+        add1[j] += t11 - t10
+        w = t01 + t10 - t00 - t11
+        if w < 0:             # non-submodular residue: truncate (rare,
+            w = 0.0           # only when costs are not a metric)
+        if w > 0:
+            # pays w when xi = 0 (source side) and xj = 1 (sink side),
+            # i.e. when the directed edge i -> j crosses the cut.
+            g.add_edge(i, j, w)
+    for k in range(n):
+        c0, c1 = u0[k] + add0[k], u1[k] + add1[k]
+        m = min(c0, c1)
+        if m < 0:
+            const += m
+            c0, c1 = c0 - m, c1 - m
+        g.add_edge(s, k, c1 if c1 != INF else INF)
+        g.add_edge(k, t, c0 if c0 != INF else INF)
+    flow = g.max_flow(s, t)
+    side = g.min_cut_side(s)
+    new_labels = [labels[k] if side[k] else alpha for k in range(n)]
+    # recompute exact energy (truncation makes flow an upper bound)
+    e = sum(unary[k][new_labels[k]] for k in range(n))
+    for (i, j) in pair_keys:
+        e += pair_cost(i, j, new_labels[i], new_labels[j])
+    return new_labels, e
+
+
+# --------------------------------------------------------------------- #
+def latency_inputs_from_graph(graph: KernelGraph, devices,
+                              bw_override: Optional[float] = None):
+    """Build (unary, pair, pins) for the latency solvers from a DDG."""
+    unary = [[dev.kernel_time(n) for dev in devices] for n in graph.nodes]
+    pins = {n.idx: n.pinned for n in graph.nodes if n.pinned is not None}
+
+    if len(devices) == 2:
+        pair = {}
+        for (i, j), nbytes in graph.edges.items():
+            rep = max(graph.nodes[i].repeat, graph.nodes[j].repeat)
+            c01 = devices[0].transfer_time(nbytes, devices[1],
+                                           bw_override, repeat=rep)
+            c10 = devices[1].transfer_time(nbytes, devices[0],
+                                           bw_override, repeat=rep)
+            pair[(i, j)] = (c01, c10)
+        return unary, pair, pins
+
+    edges = list(graph.edges)
+    byte_of = dict(graph.edges)
+    rep_of = {(i, j): max(graph.nodes[i].repeat, graph.nodes[j].repeat)
+              for (i, j) in graph.edges}
+
+    def pair_cost(i, j, gi, gj):
+        if gi == gj:
+            return 0.0
+        return devices[gi].transfer_time(byte_of[(i, j)], devices[gj],
+                                         bw_override,
+                                         repeat=rep_of[(i, j)])
+    pair_cost.edges = edges
+    return unary, pair_cost, pins

@@ -1,0 +1,82 @@
+"""Online monitor: queueing-aware policy switching (paper §III-D).
+
+Tracks per-request end-to-end latency and pure execution latency
+(compute + communication, excluding queueing).  At each window boundary
+(every ``W`` seconds of workload time) the ratio  L̄_req / L̄_exec  measures
+queueing pressure:
+
+  ratio <= beta  ->  latency-oriented policy (light load)
+  ratio  > beta  ->  throughput-oriented policy (queueing dominates)
+
+Each switch stalls all workers for ``switch_stall`` seconds at an
+iteration boundary (the paper measures ~30 ms).  The monitor also
+aggregates *kernel-group* latency — the time between consecutive
+communication events — rather than per-kernel timing, matching the
+paper's low-overhead monitoring granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class MonitorConfig:
+    window: float = 0.300        # W  (paper default 300 ms)
+    beta: float = 1.5            # queueing threshold (paper default 1.5)
+    switch_stall: float = 0.030  # worker sync stall per switch (paper ~30ms)
+    min_samples: int = 1
+
+
+class OnlineMonitor:
+    """Feed samples; read ``policy`` ("latency" | "throughput")."""
+
+    def __init__(self, config: MonitorConfig = MonitorConfig(),
+                 initial_policy: str = "latency"):
+        self.cfg = config
+        self.policy = initial_policy
+        self.switches = 0
+        self.stall_time = 0.0
+        self._win_req: List[float] = []
+        self._win_exec: List[float] = []
+        self._win_groups: List[float] = []
+        self._window_end: Optional[float] = None
+        self.history: List[Tuple[float, str, float]] = []  # (t, policy, ratio)
+
+    # ------------------------------------------------------------------ #
+    def record_request(self, now: float, request_latency: float,
+                       exec_latency: float) -> None:
+        if self._window_end is None:
+            self._window_end = now + self.cfg.window
+        self._win_req.append(request_latency)
+        self._win_exec.append(exec_latency)
+        self._maybe_switch(now)
+
+    def record_kernel_group(self, seconds: float) -> None:
+        """Latency of a kernel group = span between consecutive
+        communication ops (cheap monitoring unit, paper §III-D)."""
+        self._win_groups.append(seconds)
+
+    def tick(self, now: float) -> None:
+        """Advance workload time without a sample (idle windows)."""
+        self._maybe_switch(now)
+
+    # ------------------------------------------------------------------ #
+    def _maybe_switch(self, now: float) -> None:
+        if self._window_end is None or now < self._window_end:
+            return
+        if len(self._win_req) >= self.cfg.min_samples:
+            ratio = (sum(self._win_req) / len(self._win_req)) / max(
+                sum(self._win_exec) / len(self._win_exec), 1e-12)
+            target = "throughput" if ratio > self.cfg.beta else "latency"
+            if target != self.policy:
+                self.policy = target
+                self.switches += 1
+                self.stall_time += self.cfg.switch_stall
+            self.history.append((now, self.policy, ratio))
+        self._win_req.clear()
+        self._win_exec.clear()
+        self._win_groups.clear()
+        # advance in whole windows so long gaps don't cause switch storms
+        k = max(1, int((now - self._window_end) / self.cfg.window) + 1)
+        self._window_end += k * self.cfg.window

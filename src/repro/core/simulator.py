@@ -1,0 +1,271 @@
+"""Discrete-event simulator of disaggregated pipelined execution.
+
+The container has no heterogeneous hardware, so the paper's performance
+experiments (offline throughput, online latency, pipeline ablation,
+bandwidth robustness, monitor sensitivity) are reproduced on a
+discrete-event model driven by the *same* cost model the planner uses:
+
+  * one compute server per device (stages serialize on it),
+  * one ingress-link server per device (cut-edge transfers serialize on
+    it, the paper's receiver-side M_g),
+  * compute and communication on a device overlap (separate servers) —
+    the premise of the paper's pipelined execution model,
+  * scheduling: "priority" (oldest request first — the paper's
+    priority-aware streams) or "fifo" (naive multi-streaming),
+  * pipelining off = one request admitted at a time.
+
+Simulated time is deterministic; no wall clocks are read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import KernelGraph
+from repro.core.planner import Plan
+from repro.core.monitor import MonitorConfig, OnlineMonitor
+
+
+@dataclasses.dataclass
+class StageTask:
+    """Per-request instance of a plan stage."""
+    stage_idx: int
+    device: int
+    compute: float
+    ingress: float          # serialized transfer time on the ingress link
+
+
+def stage_tasks(graph: KernelGraph, plan: Plan, devices,
+                bw_override: Optional[float] = None) -> List[StageTask]:
+    tasks = []
+    for st in plan.stages:
+        nset = set(st.node_ids)
+        ingress = 0.0
+        for (i, j), b in graph.edges.items():
+            if j in nset and plan.labels[i] != st.device:
+                rep = max(graph.nodes[i].repeat, graph.nodes[j].repeat)
+                ingress += devices[plan.labels[i]].transfer_time(
+                    b, devices[st.device], bw_override, repeat=rep)
+        tasks.append(StageTask(st.idx, st.device, st.compute_time, ingress))
+    # recompute stage compute under (possibly) overridden devices
+    for t, st in zip(tasks, plan.stages):
+        t.compute = sum(devices[st.device].kernel_time(graph.nodes[k])
+                        for k in st.node_ids)
+    return tasks
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    completed: int
+    latencies: List[float]
+    device_busy: List[float]        # compute-busy seconds per device
+    link_busy: List[float]          # ingress-busy seconds per device
+    switches: int = 0
+
+    @property
+    def throughput(self) -> float:
+        return self.completed / max(self.makespan, 1e-12)
+
+    @property
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / max(len(self.latencies), 1)
+
+    def p(self, q: float) -> float:
+        xs = sorted(self.latencies)
+        if not xs:
+            return 0.0
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+    def busy_fraction(self, dev: int) -> float:
+        return self.device_busy[dev] / max(self.makespan, 1e-12)
+
+
+# --------------------------------------------------------------------- #
+class _DES:
+    """Core event loop shared by offline and online modes."""
+
+    def __init__(self, tasks: List[StageTask], num_devices: int,
+                 scheduling: str = "priority", pipelined: bool = True,
+                 max_inflight: int = 16):
+        self.tasks = tasks
+        self.nG = num_devices
+        self.scheduling = scheduling
+        self.pipelined = pipelined
+        self.max_inflight = max_inflight if pipelined else 1
+
+        self.dev_free = [0.0] * num_devices
+        self.link_free = [0.0] * num_devices
+        self.dev_busy = [0.0] * num_devices
+        self.link_busy = [0.0] * num_devices
+
+    def run(self, arrivals: List[float],
+            iters_per_request: int = 1,
+            stall_windows: Optional[List[Tuple[float, float]]] = None
+            ) -> SimResult:
+        """arrivals[r] = submit time of request r (must be sorted).
+
+        Each stage is two independently-scheduled units — a transfer on
+        the receiver's ingress link, then compute on the device — so the
+        link and device queues pack independently (committing both at
+        once reserves idle gaps and under-utilizes both)."""
+        n = len(arrivals)
+        # unit list: (kind 0=link/1=dev, device, duration)
+        units: List[Tuple[int, int, float]] = []
+        for t in self.tasks:
+            if t.ingress > 0:
+                units.append((0, t.device, t.ingress))
+            units.append((1, t.device, t.compute))
+        total_units = len(units) * iters_per_request
+        cursor = [0] * n
+        ready_at = [a for a in arrivals]
+        finish = [0.0] * n
+        admitted: List[int] = []
+        waiting = list(range(n))
+        done = 0
+        stall_windows = stall_windows or []
+
+        # list scheduling: repeatedly dispatch the frontier unit with the
+        # earliest feasible start.
+        #  priority   — ties broken by request age (stream priority:
+        #               staggers communication phases),
+        #  fifo/naive — equalize progress (models SM fair sharing: all
+        #               streams reach their comm phases together).
+        while done < n:
+            while waiting and len(admitted) < self.max_inflight:
+                admitted.append(waiting.pop(0))
+            best, best_start, best_key = None, math.inf, None
+            for r in admitted:
+                kind, dev, dur = units[cursor[r] % len(units)]
+                res_free = (self.link_free if kind == 0
+                            else self.dev_free)[dev]
+                start = max(ready_at[r], res_free)
+                if self.scheduling == "priority":
+                    key = (round(start, 12), r)
+                else:
+                    key = (cursor[r], round(start, 12), r)
+                if best_key is None or key < best_key:
+                    best, best_start, best_key = r, start, key
+            r = best
+            kind, dev, dur = units[cursor[r] % len(units)]
+            start = best_start
+            for (w0, w1) in stall_windows:          # policy-switch stalls
+                if w0 <= start < w1:
+                    start = w1
+            end = start + dur
+            if kind == 0:
+                self.link_free[dev] = end
+                self.link_busy[dev] += dur
+            else:
+                self.dev_free[dev] = end
+                self.dev_busy[dev] += dur
+            ready_at[r] = end
+            cursor[r] += 1
+            if cursor[r] >= total_units:
+                finish[r] = end
+                admitted.remove(r)
+                done += 1
+
+        makespan = max(finish) - min(arrivals) if n else 0.0
+        lats = [finish[r] - arrivals[r] for r in range(n)]
+        return SimResult(makespan=makespan, completed=n, latencies=lats,
+                         device_busy=self.dev_busy,
+                         link_busy=self.link_busy)
+
+
+# --------------------------------------------------------------------- #
+def simulate_offline(graph: KernelGraph, plan: Plan, devices,
+                     num_requests: int = 64,
+                     scheduling: str = "priority",
+                     pipelined: bool = True,
+                     max_inflight: int = 16,
+                     iters_per_request: int = 1,
+                     bw_override: Optional[float] = None) -> SimResult:
+    """All requests available at t=0; throughput = N / makespan."""
+    tasks = stage_tasks(graph, plan, devices, bw_override)
+    des = _DES(tasks, len(devices), scheduling, pipelined, max_inflight)
+    return des.run([0.0] * num_requests, iters_per_request)
+
+
+def simulate_online(graph: KernelGraph, plans: Dict[str, Plan], devices,
+                    rate: float, num_requests: int = 200,
+                    monitor: Optional[OnlineMonitor] = None,
+                    seed: int = 0,
+                    iters_per_request: int = 4,
+                    bw_override: Optional[float] = None) -> SimResult:
+    """Poisson arrivals at ``rate`` req/s; optional monitor switches
+    between the provided {"latency": plan, "throughput": plan}."""
+    rng = random.Random(seed)
+    arrivals = []
+    t = 0.0
+    for _ in range(num_requests):
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+
+    if monitor is None:
+        plan = plans.get("latency") or next(iter(plans.values()))
+        tasks = stage_tasks(graph, plan, devices, bw_override)
+        des = _DES(tasks, len(devices), "priority", True, 16)
+        return des.run(arrivals, iters_per_request)
+
+    # Windowed re-simulation with policy switching: requests arriving in
+    # each window run under the policy the monitor chose at its start.
+    # Exec latency baseline = unqueued single-request pass.
+    result_lats: List[float] = []
+    switches = 0
+    stalls: List[Tuple[float, float]] = []
+    cur_sched = monitor.policy
+    # exec-only latency per policy (no queueing)
+    exec_lat = {}
+    for name, plan in plans.items():
+        tasks = stage_tasks(graph, plan, devices, bw_override)
+        exec_lat[name] = sum(t0.compute + t0.ingress
+                             for t0 in tasks) * iters_per_request
+
+    # process sequentially, windowed
+    W = monitor.cfg.window
+    idx = 0
+    clock = 0.0
+    des = None
+    pending: List[float] = []
+    makespan = 0.0
+    seen_switches = 0
+    while idx < len(arrivals) or pending:
+        w_end = clock + W
+        batch = []
+        while idx < len(arrivals) and arrivals[idx] < w_end:
+            batch.append(arrivals[idx])
+            idx += 1
+        batch = pending + batch
+        pending = []
+        if batch:
+            plan = plans[monitor.policy if monitor.policy in plans
+                         else "latency"]
+            tasks = stage_tasks(graph, plan, devices, bw_override)
+            pl = monitor.policy == "throughput"
+            des = _DES(tasks, len(devices), "priority",
+                       pipelined=pl, max_inflight=16 if pl else 2)
+            sub = des.run(batch, iters_per_request, stall_windows=stalls)
+            for a, l in zip(batch, sub.latencies):
+                result_lats.append(l)
+                monitor.record_request(a + l, l,
+                                       exec_lat[monitor.policy
+                                                if monitor.policy in exec_lat
+                                                else "latency"])
+                makespan = max(makespan, a + l)
+        monitor.tick(w_end)
+        if monitor.switches > seen_switches:
+            # each switch stalls workers at the next iteration boundary
+            stalls.append((w_end, w_end + monitor.cfg.switch_stall *
+                           (monitor.switches - seen_switches)))
+            seen_switches = monitor.switches
+        clock = w_end
+
+    return SimResult(makespan=makespan, completed=len(result_lats),
+                     latencies=result_lats,
+                     device_busy=[0.0] * len(devices),
+                     link_busy=[0.0] * len(devices),
+                     switches=monitor.switches)

@@ -1,0 +1,28 @@
+"""Ambient mesh context for layers that need explicit shard_map.
+
+``with mesh_context(mesh): ...`` makes the mesh visible to model code
+(the EP MoE path) without threading it through every call signature.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev

@@ -1,0 +1,107 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm: the sequence is processed in chunks
+of Q tokens; within a chunk the recurrence closes into three MXU matmuls
+(CB^T Gram matrix, masked-decay weighting, PV product) — turning a
+latency-bound scan into systolic-friendly GEMMs — while the O(H*N*P)
+running state is carried across the chunk grid dimension in VMEM
+scratch.  Grid: (batch, n_chunks), chunks innermost (sequential on TPU,
+which legalizes the scratch carry).
+
+Shapes per block: xh (Q, H, P) -> processed per head via a fori loop to
+keep VMEM small: the per-head working set is Q*P + Q*N + N*P floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xh_ref, b_ref, c_ref, al_ref, y_ref, hout_ref,
+                state_ref, *, chunk, heads, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    bmat = b_ref[...].astype(jnp.float32)            # (Q, N)
+    cmat = c_ref[...].astype(jnp.float32)            # (Q, N)
+    cb = jax.lax.dot_general(                        # (Q, Q) Gram
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    Q = chunk
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = row >= col
+
+    def per_head(h, _):
+        al = al_ref[:, h].astype(jnp.float32)        # (Q,)
+        cum = jnp.cumsum(al)                         # (Q,)
+        # L[t, s] = exp(cum_t - cum_s) for s <= t
+        diff = cum[:, None] - cum[None, :]
+        L = jnp.where(tril, jnp.exp(diff), 0.0)
+        W = cb * L                                   # (Q, Q)
+        xh = xh_ref[:, h, :].astype(jnp.float32)     # (Q, P)
+        y_intra = jax.lax.dot_general(
+            W, xh, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (Q, P)
+        # incoming-state contribution: y_state[t] = (C_t * exp(cum_t)) h
+        h_in = state_ref[h]                          # (N, P)
+        c_dec = cmat * jnp.exp(cum)[:, None]         # (Q, N)
+        y_state = jax.lax.dot_general(
+            c_dec, h_in, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (Q, P)
+        y_ref[:, h, :] = (y_intra + y_state).astype(y_ref.dtype)
+        # state update: h' = exp(cum_Q) h + sum_s exp(cum_Q - cum_s) B_s xh_s
+        dec = jnp.exp(cum[Q - 1] - cum)              # (Q,)
+        b_dec = bmat * dec[:, None]                  # (Q, N)
+        st = jax.lax.dot_general(
+            b_dec, xh, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (N, P)
+        state_ref[h] = jnp.exp(cum[Q - 1]) * h_in + st
+        return 0
+
+    jax.lax.fori_loop(0, heads, per_head, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[...] = state_ref[...]
+
+
+def ssd_chunk_scan(xh, B_, C_, a_log, *, chunk=128, interpret=False):
+    """xh: (B, S, H, P); B_/C_: (B, S, N); a_log: (B, S, H).
+    Returns (y (B, S, H, P) fp32, final_state (B, H, N, P) fp32)."""
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nC = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, heads=H,
+                               n_chunks=nC)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(Bb, nC),
+        in_specs=[
+            pl.BlockSpec((None, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, H), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, H, N, P), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh, B_, C_, a_log)
+    return y, hT

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan: sequential token
+recurrence  h_t = a_t * h_{t-1} + dt_t x_t (x) B_t;  y_t = C_t . h_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh: jnp.ndarray, B_: jnp.ndarray, C_: jnp.ndarray,
+            a_log: jnp.ndarray):
+    """xh: (B, S, H, P) dt-scaled inputs; B_/C_: (B, S, N) fp32;
+    a_log: (B, S, H) log decay.  Returns (y (B,S,H,P) fp32,
+    final_state (B,H,N,P) fp32)."""
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+
+    def step(h, t):
+        a = jnp.exp(a_log[:, t])                       # (B, H)
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", B_[:, t].astype(jnp.float32),
+            xh[:, t].astype(jnp.float32))
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), hT

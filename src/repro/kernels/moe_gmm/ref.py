@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jnp.ndarray, w: jnp.ndarray,
+            group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """x: (T, d) rows sorted by expert; w: (E, d, f);
+    group_sizes: (E,) with sum == T.  Returns (T, f)."""
+    T, d = x.shape
+    E, _, f = w.shape
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(T)
+    # expert id per row
+    gid = jnp.sum(row[:, None] >= ends[None, :], axis=1)
+    wx = w[gid]                                    # (T, d, f) gather
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      wx.astype(jnp.float32)).astype(x.dtype)

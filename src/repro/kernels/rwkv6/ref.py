@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """r,k,v,w: (B, S, H, P) (w = per-channel decay in (0,1));
+    u: (H, P) bonus; state: (B, H, P, P) [key x value].
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1}
+    + k_t v_t^T.  Returns (y (B,S,H,P) fp32, final state)."""
+    B, S, H, P = r.shape
+
+    def step(s, t):
+        rt = r[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        wt = w[:, t].astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                          jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), sT

@@ -1,0 +1,72 @@
+"""Serving launcher: continuous-batching engine, optionally with Tessera
+kernel disaggregation for the decode step.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt_oss_20b --smoke \
+      --requests 8 --disaggregate
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt_oss_20b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--disaggregate", action="store_true")
+    ap.add_argument("--policy", default="throughput",
+                    choices=["throughput", "latency"])
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    params = M.init_params(cfg)
+
+    decode_fn = None
+    if args.disaggregate:
+        from repro.core import analyzer, planner
+        from repro.core.costmodel import TPU_V5E, TPU_V5P
+        from repro.core.executor import build_executable
+        import jax.numpy as jnp
+        cache = M.init_cache(cfg, args.slots, args.max_len)
+        toks = jnp.zeros((args.slots, 1), jnp.int32)
+        pos = jnp.zeros((args.slots,), jnp.int32)
+        step = lambda p, c, t, q: M.decode_step(p, cfg, t, c, q,
+                                                scan_layers=False)
+        traced = analyzer.analyze(step, params, cache, toks, pos,
+                                  state_argnums=(1,))
+        g = analyzer.pin_nodes(traced.graph,
+                               traced.state_readers |
+                               traced.state_writers, 0)
+        traced = traced.with_graph(g)
+        plan = planner.plan(g, [TPU_V5P, TPU_V5E], policy=args.policy)
+        print(plan.summary())
+        exe = build_executable(traced, plan)
+        decode_fn = lambda p, c, t, q: exe(p, c, t, q)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8)
+                    .astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    arrival=0.01 * i)
+            for i in range(args.requests)]
+    engine = ServingEngine(cfg, params, slots=args.slots,
+                           max_len=args.max_len, decode_fn=decode_fn)
+    stats = engine.run(reqs)
+    print(stats.summary())
+
+
+if __name__ == "__main__":
+    main()

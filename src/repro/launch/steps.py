@@ -1,0 +1,170 @@
+"""Step-function constructors + input specs for every (arch x shape) cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the corresponding step function (params,
+optimizer state, caches, token batches, stubbed modality embeddings) —
+shardable, with zero device allocation.  ``make_step`` returns the pure
+step function the dry-run lowers.
+
+long_500k is only defined for sub-quadratic architectures (SWA ring /
+SSM / hybrid); pure full-attention archs skip it (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import model as M
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.train import optim
+
+# Sub-quadratic serve paths for the 524k-token cell.
+LONG_CONTEXT_ARCHS = {"mixtral_8x7b", "zamba2_7b", "rwkv6_3b",
+                      "gpt_oss_20b"}
+ENC_LEN_DEFAULT = 1024        # encoder frames for encdec serve cells
+
+
+def cell_is_defined(arch: str, shape_name: str) -> Tuple[bool, str]:
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, ("pure full-attention arch: 524k decode requires a "
+                       "sub-quadratic mechanism (DESIGN.md skip list)")
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    step_kind: str              # train | prefill | decode
+    extras: Tuple[str, ...]     # extra batch inputs
+
+
+def get_cell(arch: str, shape_name: str,
+             smoke: bool = False) -> Cell:
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    shape = SHAPES[shape_name]
+    extras = ()
+    if cfg.family == "vlm":
+        extras = ("patch_embeds", "positions3")
+    elif cfg.family == "encdec":
+        extras = ("enc_embeds",)
+    return Cell(arch=arch, cfg=cfg, shape=shape, step_kind=shape.kind,
+                extras=extras)
+
+
+# --------------------------------------------------------------------- #
+# Step functions
+# --------------------------------------------------------------------- #
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig,
+                    remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            kw = {}
+            if cfg.family == "vlm":
+                kw["patch_embeds"] = batch["patch_embeds"]
+                kw["positions3"] = batch["positions3"]
+            if cfg.family == "encdec":
+                kw["enc_embeds"] = batch["enc_embeds"]
+            return M.loss_fn(p, cfg, batch["tokens"], batch["targets"],
+                             remat=remat, **kw)
+        loss, grads = jax.value_and_grad(lf)(params)
+        new_params, new_opt = optim.apply(ocfg, grads, opt_state, params)
+        return new_params, new_opt, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, cache, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["patch_embeds"] = batch["patch_embeds"]
+            kw["positions3"] = batch["positions3"]
+        if cfg.family == "encdec":
+            kw["enc_embeds"] = batch["enc_embeds"]
+        logits, cache = M.prefill(params, cfg, batch["tokens"], cache,
+                                  **kw)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["positions3"] = batch["positions3"]
+        logits, cache = M.decode_step(params, cfg, batch["tokens"],
+                                      cache, batch["pos"], **kw)
+        return logits, cache
+    return decode_step
+
+
+def make_step(cell: Cell, ocfg: Optional[optim.AdamWConfig] = None,
+              remat: bool = True) -> Callable:
+    if cell.step_kind == "train":
+        return make_train_step(cell.cfg, ocfg or optim.AdamWConfig(),
+                               remat=remat)
+    if cell.step_kind == "prefill":
+        return make_prefill_step(cell.cfg)
+    return make_decode_step(cell.cfg)
+
+
+# --------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStructs, no allocation)
+# --------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cell: Cell, batch: Optional[int] = None,
+                seq: Optional[int] = None) -> Dict[str, Any]:
+    cfg = cell.cfg
+    B = batch if batch is not None else cell.shape.global_batch
+    S = seq if seq is not None else cell.shape.seq_len
+    out: Dict[str, Any] = {}
+    if cell.step_kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["targets"] = _sds((B, S), jnp.int32)
+    elif cell.step_kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((B,), jnp.int32)
+    if cfg.family == "vlm":
+        Sref = S if cell.step_kind != "decode" else S
+        out["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model),
+                                   cfg.jnp_dtype)
+        s3 = S if cell.step_kind != "decode" else 1
+        out["positions3"] = _sds((3, B, s3), jnp.int32)
+        if cell.step_kind == "decode":
+            del out["patch_embeds"]     # frontend ran at prefill
+    if cfg.family == "encdec" and cell.step_kind != "decode":
+        enc_len = min(S, ENC_LEN_DEFAULT) if cell.step_kind != "train" \
+            else S
+        out["enc_embeds"] = _sds((B, enc_len, cfg.d_model), cfg.jnp_dtype)
+    return out
+
+
+def input_specs(cell: Cell, ocfg: Optional[optim.AdamWConfig] = None,
+                batch: Optional[int] = None,
+                seq: Optional[int] = None) -> Tuple:
+    """Full argument spec tuple for the cell's step function."""
+    cfg = cell.cfg
+    B = batch if batch is not None else cell.shape.global_batch
+    S = seq if seq is not None else cell.shape.seq_len
+    params = jax.eval_shape(lambda: M.init_params(cfg))
+    b = batch_specs(cell, batch=B, seq=S)
+    if cell.step_kind == "train":
+        opt = jax.eval_shape(
+            lambda p: optim.init(ocfg or optim.AdamWConfig(), p), params)
+        return (params, opt, b)
+    enc_len = min(S, ENC_LEN_DEFAULT) if cfg.family == "encdec" else None
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, max_len=S, enc_len=enc_len))
+    return (params, cache, b)

@@ -1,0 +1,51 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Full configs train on the production mesh via the same step function the
+dry-run lowers; on this CPU container use --smoke reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+
+import repro.configs as configs
+from repro.data.pipeline import TokenBatches
+from repro.train.compress import CompressionConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress", choices=["none", "int8", "topk"],
+                    default="none")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, accum=args.accum,
+                       compression=CompressionConfig(args.compress))
+    trainer = Trainer(cfg, tcfg)
+    batches = TokenBatches(cfg.vocab_size, args.batch, args.seq)
+    if args.resume:
+        trainer.resume(batches)
+    else:
+        trainer.run(batches)
+    for m in trainer.metrics:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"t {m['t']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

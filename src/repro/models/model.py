@@ -1,0 +1,593 @@
+"""Model assembly: one functional decoder stack covering every family.
+
+Layer stacks are ``jax.lax.scan``-based over *stacked* per-layer parameter
+leaves (leading dim = num_layers) so XLA compiles a single layer body —
+essential for 40-cell dry-run compile times.  ``scan_layers=False``
+unrolls the stack with per-layer region markers, the form the Tessera
+analyzer consumes (one DDG node per kernel per layer).
+
+Entry points (all pure):
+  init_params / init_cache
+  forward_logits(params, cfg, tokens, ...)      full-sequence logits
+  loss_fn(params, cfg, tokens, targets)         train loss
+  prefill(params, cfg, tokens, cache)           fill caches, last logits
+  decode_step(params, cfg, tokens, cache, pos)  one token, (B,) positions
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import marker
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ===================================================================== #
+# Parameter construction
+# ===================================================================== #
+def _stack_init(fn, num: int, key):
+    keys = jax.random.split(key, num)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key=None) -> Params:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_emb, k_layers, k_extra = jax.random.split(key, 3)
+    p: Params = {"embed": L.init_embed(cfg, k_emb),
+                 "final_norm": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            lp = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                  "attn": L.init_attention(cfg, key=k1),
+                  "ln2": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype)}
+            if cfg.family == "moe":
+                lp["moe"] = L.init_moe(cfg, k2)
+            else:
+                lp["mlp"] = L.init_mlp(cfg, key=k2)
+            return lp
+        p["layers"] = _stack_init(one, cfg.num_layers, k_layers)
+
+    elif cfg.family == "ssm":           # rwkv6
+        def one(k):
+            return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "tm": S.init_rwkv6(cfg, k),
+                    "ln2": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype)}
+        p["layers"] = _stack_init(one, cfg.num_layers, k_layers)
+
+    elif cfg.family == "hybrid":        # zamba2
+        def one(k):
+            return {"ln": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "mamba": S.init_mamba2(cfg, k)}
+        p["layers"] = _stack_init(one, cfg.num_layers, k_layers)
+        k1, k2 = jax.random.split(k_extra)
+        p["shared_attn"] = {
+            "ln1": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+            "attn": L.init_attention(cfg, key=k1),
+            "ln2": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+            "mlp": L.init_mlp(cfg, key=k2),
+        }
+
+    elif cfg.family == "encdec":        # seamless backbone
+        def enc_one(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "attn": L.init_attention(cfg, key=k1),
+                    "ln2": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "mlp": L.init_mlp(cfg, key=k2)}
+
+        def dec_one(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "attn": L.init_attention(cfg, key=k1),
+                    "ln_x": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "xattn": L.init_attention(cfg, key=k2),
+                    "ln2": L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+                    "mlp": L.init_mlp(cfg, key=k3)}
+        ke, kd = jax.random.split(k_layers)
+        p["encoder"] = _stack_init(enc_one, cfg.encoder_layers, ke)
+        p["layers"] = _stack_init(dec_one, cfg.num_layers, kd)
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model, cfg.jnp_dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ===================================================================== #
+# Layer bodies (shared by scan and unrolled paths)
+# ===================================================================== #
+def _dense_block(lp, x, cfg, *, positions, cache=None, cache_pos=None,
+                 positions3=None, layer_idx=-1, tagged=False):
+    # Region markers open BEFORE the computation so the analyzer tags
+    # every kernel traced inside the block (begin ... end brackets the
+    # equation stream).
+    xin = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if tagged:
+        xin, close = marker.tag(xin, block="attention", layer=layer_idx)
+    h, new_cache = L.attention(
+        lp["attn"], xin, cfg, positions=positions, kv_cache=cache,
+        cache_pos=cache_pos, positions3=positions3)
+    if tagged:
+        h = close(h)
+    x = x + h
+    y_in = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    blk = "moe" if cfg.family == "moe" else "ffn"
+    if tagged:
+        y_in, close2 = marker.tag(y_in, block=blk, layer=layer_idx)
+    if cfg.family == "moe":
+        y = L.moe(lp["moe"], y_in, cfg)
+    else:
+        y = L.mlp(lp["mlp"], y_in, cfg)
+    if tagged:
+        y = close2(y)
+    return x + y, new_cache
+
+
+def _rwkv_block(lp, x, cfg, *, state=None, layer_idx=-1, tagged=False):
+    st_tm = None if state is None else \
+        {"tm_x": state["tm_x"], "wkv": state["wkv"]}
+    xin = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if tagged:
+        xin, close = marker.tag(xin, block="ssm", layer=layer_idx)
+    h, new_tm = S.rwkv6_time_mix(lp["tm"], xin, cfg, state=st_tm)
+    if tagged:
+        h = close(h)
+    x = x + h
+    st_cm = None if state is None else state["cm_x"]
+    # channel-mix params live inside the "tm" dict (see ssm.init_rwkv6)
+    yin = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    if tagged:
+        yin, close2 = marker.tag(yin, block="ffn", layer=layer_idx)
+    y, new_cm = S.rwkv6_channel_mix(lp["tm"], yin, cfg, state=st_cm)
+    if tagged:
+        y = close2(y)
+    new_state = None
+    if state is not None:
+        new_state = {"tm_x": new_tm["tm_x"], "wkv": new_tm["wkv"],
+                     "cm_x": new_cm}
+    return x + y, new_state
+
+
+def _mamba_block(lp, x, cfg, *, state=None, layer_idx=-1, tagged=False):
+    st = None if state is None else \
+        {"ssm": state["ssm"], "conv": state["conv"]}
+    xin = L.rms_norm(lp["ln"], x, cfg.norm_eps)
+    if tagged:
+        xin, close = marker.tag(xin, block="ssm", layer=layer_idx)
+    h, new_st = S.mamba2(lp["mamba"], xin, cfg, state=st)
+    if tagged:
+        h = close(h)
+    return x + h, new_st
+
+
+def _shared_attn_block(sp, x, cfg, *, positions, cache=None,
+                       cache_pos=None, tagged=False, layer_idx=-1):
+    xin = L.rms_norm(sp["ln1"], x, cfg.norm_eps)
+    if tagged:
+        xin, close = marker.tag(xin, block="attention", layer=layer_idx)
+    h, new_cache = L.attention(sp["attn"], xin, cfg, positions=positions,
+                               kv_cache=cache, cache_pos=cache_pos)
+    if tagged:
+        h = close(h)
+    x = x + h
+    yin = L.rms_norm(sp["ln2"], x, cfg.norm_eps)
+    if tagged:
+        yin, close2 = marker.tag(yin, block="ffn", layer=layer_idx)
+    y = L.mlp(sp["mlp"], yin, cfg)
+    if tagged:
+        y = close2(y)
+    return x + y, new_cache
+
+
+# ===================================================================== #
+# Layer-stack driver: scan (compile-once) or unrolled (analysis/roofline)
+# ===================================================================== #
+def _run_stack(body, x, xs_tree, scan: bool):
+    """Exactly jax.lax.scan(body, x, xs_tree) semantics; ``scan=False``
+    unrolls the loop in Python (used by the Tessera analyzer and by the
+    roofline L1/L2 extrapolation compiles)."""
+    if scan:
+        return jax.lax.scan(body, x, xs_tree)
+    leaves = jax.tree_util.tree_leaves(xs_tree)
+    L = leaves[0].shape[0]
+    ys = []
+    for i in range(L):
+        x, y = body(x, jax.tree_util.tree_map(lambda a: a[i], xs_tree))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+# ===================================================================== #
+# Caches
+# ===================================================================== #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: Optional[int] = None) -> Params:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"kv": L.make_kv_cache(cfg, batch, max_len)}
+    if cfg.family == "ssm":
+        return {"rwkv": S.make_rwkv6_state(cfg, batch)}
+    if cfg.family == "hybrid":
+        n_attn = (cfg.num_layers + cfg.hybrid_attn_every - 1) \
+            // cfg.hybrid_attn_every
+        return {"mamba": S.make_mamba2_state(cfg, batch),
+                "kv": L.make_kv_cache(cfg, batch, max_len, layers=n_attn)}
+    if cfg.family == "encdec":
+        enc_len = enc_len or max_len
+        return {"kv": L.make_kv_cache(cfg, batch, max_len),
+                "cross_k": jnp.zeros(
+                    (cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
+                     cfg.head_dim), cfg.jnp_dtype),
+                "cross_v": jnp.zeros(
+                    (cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
+                     cfg.head_dim), cfg.jnp_dtype)}
+    raise ValueError(cfg.family)
+
+
+# ===================================================================== #
+# Forward paths
+# ===================================================================== #
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def _embed_inputs(params, cfg, tokens, patch_embeds):
+    x = L.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        npat = patch_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, patch_embeds.astype(x.dtype), 0, axis=1)
+    return x
+
+
+def _encoder_forward(params, cfg, enc_embeds, *, scan_layers=True,
+                     remat=False):
+    """Bidirectional encoder over precomputed frame embeddings (B,S,d)."""
+    x = enc_embeds.astype(cfg.jnp_dtype)
+    B, Se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def body(x, lp):
+        h, _ = L.attention(lp["attn"],
+                           L.rms_norm(lp["ln1"], x, cfg.norm_eps), cfg,
+                           positions=positions, causal=False)
+        x = x + h
+        y = L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x, cfg.norm_eps), cfg)
+        return x + y, None
+
+    if scan_layers:
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x,
+                            params["encoder"])
+    else:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["encoder"])
+            x, _ = body(x, lp)
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_logits(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   *, patch_embeds=None, positions3=None, enc_embeds=None,
+                   scan_layers: bool = True, remat: bool = False,
+                   q_chunk: int = 512) -> jnp.ndarray:
+    """Full-sequence logits (teacher forcing / training / prefill-style)."""
+    B, Sq = tokens.shape
+    x = _embed_inputs(params, cfg, tokens, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec requires encoder inputs"
+        enc_out = _encoder_forward(params, cfg, enc_embeds,
+                                   scan_layers=scan_layers, remat=remat)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, lp):
+            y, _ = _dense_block(lp, x, cfg, positions=positions,
+                                positions3=positions3)
+            return y, None
+        if scan_layers:
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x,
+                                params["layers"])
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i],
+                                            params["layers"])
+                x, _ = _dense_block(lp, x, cfg, positions=positions,
+                                    positions3=positions3, layer_idx=i,
+                                    tagged=True)
+
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            y, _ = _rwkv_block(lp, x, cfg)
+            return y, None
+        if scan_layers:
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x,
+                                params["layers"])
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i],
+                                            params["layers"])
+                x, _ = _rwkv_block(lp, x, cfg, layer_idx=i, tagged=True)
+
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        nSB = cfg.num_layers // k
+        sp = params["shared_attn"]
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((nSB, k) + a.shape[1:]), params["layers"])
+
+        def body(x, lp_group):
+            x, _ = _shared_attn_block(sp, x, cfg, positions=positions)
+            for j in range(k):
+                lp = jax.tree_util.tree_map(lambda a: a[j], lp_group)
+                x, _ = _mamba_block(lp, x, cfg)
+            return x, None
+        if scan_layers:
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, stacked)
+        else:
+            for i in range(nSB):
+                lp_group = jax.tree_util.tree_map(lambda a: a[i], stacked)
+                x, _ = body(x, lp_group)
+
+    elif cfg.family == "encdec":
+        def body(x, lp):
+            h, _ = L.attention(lp["attn"],
+                               L.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                               cfg, positions=positions)
+            x = x + h
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+            h, _ = L.attention(lp["xattn"],
+                               L.rms_norm(lp["ln_x"], x, cfg.norm_eps),
+                               cfg, positions=positions,
+                               cross_kv=(ck, cv), causal=False)
+            x = x + h
+            y = L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x, cfg.norm_eps),
+                      cfg)
+            return x + y, None
+        if scan_layers:
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x,
+                                params["layers"])
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i],
+                                            params["layers"])
+                x, _ = body(x, lp)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, **kw) -> jnp.ndarray:
+    logits = forward_logits(params, cfg, tokens, **kw)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------- #
+# Serving paths
+# --------------------------------------------------------------------- #
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, patch_embeds=None, positions3=None,
+            enc_embeds=None, scan_layers: bool = True,
+            q_chunk: int = 512) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt, fill caches, return last-position logits."""
+    B, Sq = tokens.shape
+    x = _embed_inputs(params, cfg, tokens, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            lp, ck, cv = xs
+            y, nc = _dense_block(lp, x, cfg, positions=positions,
+                                 cache={"k": ck, "v": cv}, cache_pos=None,
+                                 positions3=positions3,
+                                 tagged=not scan_layers)
+            return y, (nc["k"], nc["v"])
+        x, (nk, nv) = _run_stack(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"]), scan_layers)
+        new_cache["kv"] = {"k": nk, "v": nv}
+
+    elif cfg.family == "ssm":
+        st = cache["rwkv"]
+
+        def body(x, xs):
+            lp, tm_x, wkv, cm_x = xs
+            y, ns = _rwkv_block(lp, x, cfg,
+                                state={"tm_x": tm_x, "wkv": wkv,
+                                       "cm_x": cm_x},
+                                tagged=not scan_layers)
+            return y, (ns["tm_x"], ns["wkv"], ns["cm_x"])
+        x, (tm, wkv, cm) = _run_stack(
+            body, x, (params["layers"], st["tm_x"], st["wkv"],
+                      st["cm_x"]), scan_layers)
+        new_cache["rwkv"] = {"tm_x": tm, "wkv": wkv, "cm_x": cm}
+
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        nSB = cfg.num_layers // k
+        sp = params["shared_attn"]
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((nSB, k) + a.shape[1:]), params["layers"])
+        mst = jax.tree_util.tree_map(
+            lambda a: a.reshape((nSB, k) + a.shape[1:]), cache["mamba"])
+
+        def body(x, xs):
+            lp_group, mamba_g, ck, cv = xs
+            x, nc = _shared_attn_block(sp, x, cfg, positions=positions,
+                                       cache={"k": ck, "v": cv},
+                                       tagged=not scan_layers)
+            new_m = []
+            for j in range(k):
+                lp = jax.tree_util.tree_map(lambda a: a[j], lp_group)
+                stj = jax.tree_util.tree_map(lambda a: a[j], mamba_g)
+                x, ns = _mamba_block(lp, x, cfg, state=stj,
+                                     tagged=not scan_layers)
+                new_m.append(ns)
+            new_m = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                           *new_m)
+            return x, (new_m, nc["k"], nc["v"])
+        x, (nm, nk, nv) = _run_stack(
+            body, x, (stacked, mst, cache["kv"]["k"], cache["kv"]["v"]),
+            scan_layers)
+        new_cache["mamba"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), nm)
+        new_cache["kv"] = {"k": nk, "v": nv}
+
+    elif cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_out = _encoder_forward(params, cfg, enc_embeds,
+                                   scan_layers=scan_layers)
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h, nc = L.attention(lp["attn"],
+                                L.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                                cfg, positions=positions,
+                                kv_cache={"k": ck, "v": cv})
+            x = x + h
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+            h, _ = L.attention(lp["xattn"],
+                               L.rms_norm(lp["ln_x"], x, cfg.norm_eps),
+                               cfg, positions=positions,
+                               cross_kv=(xk, xv), causal=False)
+            x = x + h
+            y = L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x, cfg.norm_eps),
+                      cfg)
+            return x + y, (nc["k"], nc["v"], xk, xv)
+        x, (nk, nv, xk, xv) = _run_stack(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"]), scan_layers)
+        new_cache["kv"] = {"k": nk, "v": nv}
+        assert xk.shape[2] == cache["cross_k"].shape[2], \
+            "cross-KV cache must be allocated with enc_len"
+        new_cache["cross_k"] = xk
+        new_cache["cross_v"] = xv
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)[:, 0], new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: Params, pos: jnp.ndarray, *, positions3=None,
+                scan_layers: bool = True) -> Tuple[jnp.ndarray, Params]:
+    """One decode step.  tokens: (B, 1) int32; pos: (B,) absolute
+    positions.  Returns (logits (B, V), updated cache)."""
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    positions = pos[:, None]                          # (B, 1)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        cap = cache["kv"]["k"].shape[2]
+        slot = pos % cap if cfg.sliding_window is not None else pos
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            y, nc = _dense_block(lp, x, cfg, positions=positions,
+                                 cache={"k": ck, "v": cv},
+                                 cache_pos=slot, positions3=positions3,
+                                 tagged=not scan_layers)
+            return y, (nc["k"], nc["v"])
+        x, (nk, nv) = _run_stack(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"]), scan_layers)
+        new_cache["kv"] = {"k": nk, "v": nv}
+
+    elif cfg.family == "ssm":
+        st = cache["rwkv"]
+
+        def body(x, xs):
+            lp, tm_x, wkv, cm_x = xs
+            y, ns = _rwkv_block(lp, x, cfg,
+                                state={"tm_x": tm_x, "wkv": wkv,
+                                       "cm_x": cm_x},
+                                tagged=not scan_layers)
+            return y, (ns["tm_x"], ns["wkv"], ns["cm_x"])
+        x, (tm, wkv, cm) = _run_stack(
+            body, x, (params["layers"], st["tm_x"], st["wkv"],
+                      st["cm_x"]), scan_layers)
+        new_cache["rwkv"] = {"tm_x": tm, "wkv": wkv, "cm_x": cm}
+
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        nSB = cfg.num_layers // k
+        sp = params["shared_attn"]
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((nSB, k) + a.shape[1:]), params["layers"])
+        mst = jax.tree_util.tree_map(
+            lambda a: a.reshape((nSB, k) + a.shape[1:]), cache["mamba"])
+
+        def body(x, xs):
+            lp_group, mamba_g, ck, cv = xs
+            x, nc = _shared_attn_block(sp, x, cfg, positions=positions,
+                                       cache={"k": ck, "v": cv},
+                                       cache_pos=pos,
+                                       tagged=not scan_layers)
+            new_m = []
+            for j in range(k):
+                lp = jax.tree_util.tree_map(lambda a: a[j], lp_group)
+                stj = jax.tree_util.tree_map(lambda a: a[j], mamba_g)
+                x, ns = _mamba_block(lp, x, cfg, state=stj,
+                                     tagged=not scan_layers)
+                new_m.append(ns)
+            new_m = jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                           *new_m)
+            return x, (new_m, nc["k"], nc["v"])
+        x, (nm, nk, nv) = _run_stack(
+            body, x, (stacked, mst, cache["kv"]["k"], cache["kv"]["v"]),
+            scan_layers)
+        new_cache["mamba"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), nm)
+        new_cache["kv"] = {"k": nk, "v": nv}
+
+    elif cfg.family == "encdec":
+        def body(x, xs):
+            lp, ck, cv, xk, xv = xs
+            h, nc = L.attention(lp["attn"],
+                                L.rms_norm(lp["ln1"], x, cfg.norm_eps),
+                                cfg, positions=positions,
+                                kv_cache={"k": ck, "v": cv},
+                                cache_pos=pos)
+            x = x + h
+            h, _ = L.attention(lp["xattn"],
+                               L.rms_norm(lp["ln_x"], x, cfg.norm_eps),
+                               cfg, positions=positions,
+                               cross_kv=(xk, xv), causal=False)
+            x = x + h
+            y = L.mlp(lp["mlp"], L.rms_norm(lp["ln2"], x, cfg.norm_eps),
+                      cfg)
+            return x + y, (nc["k"], nc["v"])
+        x, (nk, nv) = _run_stack(
+            body, x, (params["layers"], cache["kv"]["k"],
+                      cache["kv"]["v"], cache["cross_k"],
+                      cache["cross_v"]), scan_layers)
+        new_cache["kv"] = {"k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg)[:, 0], new_cache

@@ -1,0 +1,316 @@
+"""State-space and RNN blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD formulation (intra-chunk masked attention-like
+matmuls + inter-chunk state carry) so training/prefill is matmul-dominated
+— the form the Pallas kernel accelerates on TPU.  Decode is the O(1)
+recurrent step.
+
+RWKV6 implements data-dependent per-channel decay (the Finch contribution)
+with token-shift time mixing and relu^2 channel mixing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ===================================================================== #
+# Mamba2 (SSD)
+# ===================================================================== #
+def init_mamba2(cfg: ModelConfig, key=None) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    dt = cfg.jnp_dtype
+    if key is None:
+        key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * N + H))
+                    * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di + 2 * N))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype=dt),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "out_norm": jnp.ones((di,), dtype=dt),
+        "out_proj": (jax.random.normal(ks[2], (di, d))
+                     / math.sqrt(di)).astype(dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+    state: (B, K-1, C) carry of previous tokens for decode."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    new_state = xp[:, S:]                              # last K-1 tokens
+    return (out + b.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunk_scan(xh, B_, C_, a_log, chunk: int):
+    """Chunked SSD.  xh: (B, S, H, P) dt-scaled inputs; B_/C_: (B, S, N);
+    a_log: (B, S, H) log decay (negative).  Returns (y, final_state)."""
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nC = S // chunk
+    xh = xh.reshape(Bb, nC, chunk, H, P)
+    Bc = B_.reshape(Bb, nC, chunk, N)
+    Cc = C_.reshape(Bb, nC, chunk, N)
+    al = a_log.reshape(Bb, nC, chunk, H)
+    cum = jnp.cumsum(al, axis=2)                       # (B, nC, Q, H)
+
+    # intra-chunk: L[t, s] = exp(cum_t - cum_s) for s <= t
+    def intra(args):
+        xc, bc, cc, cm = args                          # per-chunk slices
+        # cm: (B, Q, H)
+        diff = cm[:, :, None, :] - cm[:, None, :, :]   # (B, Q, Q, H)
+        Q = cm.shape[1]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqn,bsn->bqs", cc, bc)        # (B, Q, Q)
+        W = cb[:, :, :, None] * L                      # (B, Q, Q, H)
+        y = jnp.einsum("bqsh,bshp->bqhp", W, xc.astype(jnp.float32))
+        # state contribution of this chunk
+        dec = jnp.exp(cm[:, -1, None, :] - cm)         # (B, Q, H)
+        st = jnp.einsum("bsh,bsn,bshp->bhnp", dec, bc,
+                        xc.astype(jnp.float32))        # (B, H, N, P)
+        return y, st
+
+    # scan over chunks carrying the running state (B, H, N, P)
+    def body(h, idx):
+        xc = xh[:, idx]
+        bc = Bc[:, idx].astype(jnp.float32)
+        cc = Cc[:, idx].astype(jnp.float32)
+        cm = cum[:, idx]
+        y_intra, st = intra((xc, bc, cc, cm))
+        # contribution of incoming state: y_state[t] = C_t . (exp(cum_t) h)
+        decay_in = jnp.exp(cm)                         # (B, Q, H)
+        y_state = jnp.einsum("bqn,bqh,bhnp->bqhp", cc, decay_in, h)
+        h_new = jnp.exp(cm[:, -1])[:, :, None, None] * h + st
+        return h_new, y_intra + y_state
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    hT, ys = jax.lax.scan(body, h0, jnp.arange(nC))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, hT
+
+
+def mamba2(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+           state: Optional[Dict[str, jnp.ndarray]] = None,
+           chunk: int = 128
+           ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba2 mixer.  state = {"ssm": (B,H,N,P), "conv": (B,K-1,C)} for
+    decode; None for train/prefill (returns final state when given)."""
+    B, S, d = x.shape
+    di, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    proj = x @ p["in_proj"]                            # (B,S,2di+2N+H)
+    z, xs, Bv, Cv, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bv, Cv = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                           # (H,) negative
+    a_log = dt * A                                     # (B,S,H) log decay
+    xh = xs.reshape(B, S, H, P)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+
+    if S == 1 and state is not None:
+        # recurrent decode step
+        h = state["ssm"]                               # (B,H,N,P)
+        a = jnp.exp(a_log[:, 0])                       # (B,H)
+        h = h * a[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bv[:, 0].astype(jnp.float32), xh_dt[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", Cv[:, 0].astype(jnp.float32), h)
+        y = y[:, None]                                 # (B,1,H,P)
+        new_state = {"ssm": h, "conv": new_conv}
+    else:
+        pad = (-S) % chunk
+        if pad:
+            xh_dt = jnp.pad(xh_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+            Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+            a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        y, hT = _ssd_chunk_scan(xh_dt, Bv, Cv, a_log, chunk)
+        y = y[:, :S]
+        new_state = ({"ssm": hT, "conv": new_conv}
+                     if state is not None else None)
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMS norm (mamba2 style)
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"], new_state
+
+
+def make_mamba2_state(cfg: ModelConfig, batch: int,
+                      layers: Optional[int] = None) -> Dict[str, Any]:
+    L = layers if layers is not None else cfg.num_layers
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    C = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((L, batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, C),
+                          cfg.jnp_dtype),
+    }
+
+
+# ===================================================================== #
+# RWKV6 (Finch)
+# ===================================================================== #
+def init_rwkv6(cfg: ModelConfig, key=None) -> Params:
+    d = cfg.d_model
+    P = cfg.rwkv_head_dim
+    H = cfg.rwkv_heads
+    f = cfg.d_ff
+    dt = cfg.jnp_dtype
+    if key is None:
+        key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    lora = max(32, d // 64)
+    return {
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d))).astype(dt),  # r,k,v,w,g
+        "w_r": (jax.random.normal(ks[1], (d, d)) * s).astype(dt),
+        "w_k": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+        "w_v": (jax.random.normal(ks[3], (d, d)) * s).astype(dt),
+        "w_g": (jax.random.normal(ks[4], (d, d)) * s).astype(dt),
+        "w_o": (jax.random.normal(ks[5], (d, d)) * s).astype(dt),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, dtype=jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[6], (d, lora)) * s).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[7], (lora, d)) * 0.01).astype(dt),
+        "u": jnp.zeros((H, P), dtype=jnp.float32),      # bonus
+        "ln_x": jnp.ones((d,), dtype=dt),               # per-head norm
+        # channel-mix
+        "mu_c": (jax.random.uniform(ks[8], (2, d))).astype(dt),
+        "ck": (jax.random.normal(ks[9], (d, f)) * s).astype(dt),
+        "cv": (jax.random.normal(ks[0], (f, d)) / math.sqrt(f)).astype(dt),
+        "cr": (jax.random.normal(ks[1], (d, d)) * s).astype(dt),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (carried across steps)."""
+    B, S, d = x.shape
+    if S == 1:
+        return last[:, None]
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """RWKV6 linear attention.  r,k,v: (B,S,H,P); w: (B,S,H,P) decay in
+    (0,1); u: (H,P) bonus; state: (B,H,P,P) [key x value].
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1}
+          + k_t v_t^T.
+    """
+    B, S, H, P = r.shape
+
+    def step(s, t):
+        rt = r[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        wt = w[:, t]
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,P,P)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(step, state, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), sT                  # (B,S,H,P), state
+
+
+def rwkv6_time_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                   state: Optional[Dict[str, jnp.ndarray]] = None
+                   ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    B, S, d = x.shape
+    H, P = cfg.rwkv_heads, cfg.rwkv_head_dim
+    last = state["tm_x"] if state is not None else jnp.zeros((B, d), x.dtype)
+    prev = _token_shift(x, last)
+    mu = p["mu"]
+    xr = x + (prev - x) * mu[0]
+    xk = x + (prev - x) * mu[1]
+    xv = x + (prev - x) * mu[2]
+    xw = x + (prev - x) * mu[3]
+    xg = x + (prev - x) * mu[4]
+    r = (xr @ p["w_r"]).reshape(B, S, H, P)
+    k = (xk @ p["w_k"]).reshape(B, S, H, P)
+    v = (xv @ p["w_v"]).reshape(B, S, H, P)
+    g = jax.nn.silu(xg @ p["w_g"])
+    # data-dependent decay (the RWKV6 contribution)
+    ww = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @
+                    p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, P)      # in (0,1)
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, P, P), jnp.float32))
+    y, sT = _wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(B, S, d)
+    # group norm per head
+    yh = y.reshape(B, S, H, P)
+    mean = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, d) * p["ln_x"].astype(jnp.float32)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    new_state = None
+    if state is not None:
+        new_state = {"tm_x": x[:, -1], "wkv": sT}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                      state: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    B, S, d = x.shape
+    last = state if state is not None else jnp.zeros((B, d), x.dtype)
+    prev = _token_shift(x, last)
+    xk = x + (prev - x) * p["mu_c"][0]
+    xr = x + (prev - x) * p["mu_c"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    kv = k @ p["cv"]
+    out = jax.nn.sigmoid(xr @ p["cr"]) * kv
+    new_state = x[:, -1] if state is not None else None
+    return out, new_state
+
+
+def make_rwkv6_state(cfg: ModelConfig, batch: int,
+                     layers: Optional[int] = None) -> Dict[str, Any]:
+    L = layers if layers is not None else cfg.num_layers
+    H, P, d = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "tm_x": jnp.zeros((L, batch, d), cfg.jnp_dtype),
+        "wkv": jnp.zeros((L, batch, H, P, P), jnp.float32),
+        "cm_x": jnp.zeros((L, batch, d), cfg.jnp_dtype),
+    }

@@ -1,0 +1,100 @@
+"""HLO-text parsing for roofline collective accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (SPMD, per-chip) HLO module and sum the bytes moved by every
+collective op.  Per-op traffic accounting (ring-algorithm estimates):
+
+  all-gather          result_bytes            (each chip receives ~full)
+  all-reduce          2 x result_bytes x (n-1)/n
+  reduce-scatter      result_bytes x n        (operand is consumed)
+  all-to-all          result_bytes
+  collective-permute  result_bytes
+
+The parsed numbers are PER-CHIP traffic; the roofline collective term is
+per_chip_bytes / link_bw (equivalently sum-over-chips / (chips x BW)).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    bs = _DTYPE_BYTES.get(dtype)
+    if bs is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n * bs)
+
+
+def _result_bytes(line: str, op: str) -> float:
+    """Sum shape literals appearing before the op call (the result)."""
+    head = line.split(f"{op}(")[0]
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(head):
+        total += _shape_bytes(dtype, dims)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota form [groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float],
+                                             Dict[str, int]]:
+    """(total per-chip traffic bytes, bytes-by-op, count-by-op)."""
+    by_op: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for op in _COLLECTIVES:
+            # match the op as an instruction call, not a substring of
+            # another op name (all-reduce vs all-reduce-start)
+            if f"{op}(" not in s and f"{op}-start(" not in s:
+                continue
+            opname = op if f"{op}(" in s else f"{op}-start"
+            rb = _result_bytes(s, opname.split("-start")[0]
+                               if "-start" in opname else op)
+            if rb == 0.0:
+                continue
+            n = _group_size(s)
+            if op == "all-reduce":
+                traffic = 2.0 * rb * (n - 1) / max(n, 1)
+            elif op == "reduce-scatter":
+                traffic = rb * n
+            else:
+                traffic = rb
+            by_op[op] += traffic
+            counts[op] += 1
+            break
+    return sum(by_op.values()), dict(by_op), dict(counts)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,74 @@
+"""Fault-tolerant runtime glue: failure detection, elastic re-planning,
+straggler deadlines.
+
+Tessera-native elasticity (DESIGN.md §6): because the unit of placement
+is a *kernel*, losing a device never requires re-architecting the
+parallelism — the planner simply re-solves placement over the surviving
+device set (``replan_on_failure``), pinned state is re-homed, and the
+executor is rebuilt.  This is strictly more flexible than phase/block
+disaggregation, whose recovery unit is an entire phase pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence, Set
+
+import jax
+
+from repro.core import planner as planner_lib
+from repro.core.analyzer import TracedGraph
+from repro.core.executor import StagedExecutable, build_executable
+from repro.core.planner import Plan
+
+
+@dataclasses.dataclass
+class DeviceHealth:
+    """Heartbeat-style health registry (simulated failures in tests)."""
+    alive: List[bool]
+
+    def fail(self, idx: int) -> None:
+        self.alive[idx] = False
+
+    def lost(self) -> Set[int]:
+        return {i for i, a in enumerate(self.alive) if not a}
+
+
+class ElasticExecutor:
+    """Disaggregated executor that survives device loss.
+
+    On ``mark_failed(i)`` the placement is re-solved over survivors and
+    stages recompiled; in-flight pure stages are simply re-executed (the
+    same idempotence that powers straggler re-execution).
+    """
+
+    def __init__(self, traced: TracedGraph, device_specs,
+                 jax_devices: Sequence[Any], policy: str = "throughput"):
+        self.traced = traced
+        self.specs = list(device_specs)
+        self.jax_devices = list(jax_devices)
+        self.policy = policy
+        self.health = DeviceHealth([True] * len(device_specs))
+        self.plan = planner_lib.plan(traced.graph, self.specs,
+                                     policy=policy)
+        self.replans = 0
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        alive_idx = [i for i, a in enumerate(self.health.alive) if a]
+        spec_map = [self.specs[i] for i in alive_idx]
+        dev_map = [self.jax_devices[i % len(self.jax_devices)]
+                   for i in alive_idx]
+        if len(alive_idx) < len(self.specs):
+            self.plan = planner_lib.replan_on_failure(
+                self.traced.graph, self.specs, self.health.lost(),
+                self.plan, cache=False)
+        self.exe = build_executable(self.traced, self.plan, dev_map)
+
+    def mark_failed(self, idx: int) -> None:
+        self.health.fail(idx)
+        self.replans += 1
+        self._rebuild()
+
+    def __call__(self, *args, **kwargs):
+        return self.exe(*args, **kwargs)

@@ -1,0 +1,96 @@
+"""Gradient compression for the slow (cross-pod / DCN) all-reduce.
+
+Two composable schemes with error feedback (EF — the residual of each
+step's compression is added back next step, which keeps SGD convergent):
+
+  * int8 quantization: per-tensor absmax scale, ~4x traffic reduction
+    vs fp32 (2x vs bf16).
+  * top-k sparsification: keep the k largest-magnitude entries
+    (k = ratio * size), send values + indices.
+
+On a real multi-pod mesh these run inside shard_map around the ``pod``
+axis all-reduce; on CPU they are pure functions with the same signature,
+property-tested for the EF invariant (compressed + residual == input).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jnp.ndarray, ratio: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(values: jnp.ndarray, idx: jnp.ndarray,
+                 shape) -> jnp.ndarray:
+    out = jnp.zeros(int(jnp.prod(jnp.array(shape))), values.dtype)
+    return out.at[idx].set(values).reshape(shape)
+
+
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    scheme: str = "int8"         # "int8" | "topk" | "none"
+    topk_ratio: float = 0.05
+
+
+def init_residual(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(cfg: CompressionConfig, grads: Any,
+                        residual: Any) -> Tuple[Any, Any]:
+    """Apply EF compression leaf-wise.  Returns (decompressed grads that
+    would survive the wire, new residual).  The wire format (int8 / value
+    +index pairs) is what the DCN all-reduce would carry."""
+    if cfg.scheme == "none":
+        return grads, residual
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if cfg.scheme == "int8":
+            q, s = quantize_int8(x)
+            y = dequantize_int8(q, s)
+        elif cfg.scheme == "topk":
+            vals, idx = topk_sparsify(x, cfg.topk_ratio)
+            y = topk_densify(vals, idx, x.shape)
+        else:
+            raise ValueError(cfg.scheme)
+        return y.astype(g.dtype), x - y
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_r
+
+
+def wire_bytes(cfg: CompressionConfig, grads: Any) -> float:
+    """Bytes the compressed gradients occupy on the interconnect."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    if cfg.scheme == "int8":
+        return sum(l.size * 1 + 4 for l in leaves)
+    if cfg.scheme == "topk":
+        return sum(int(l.size * cfg.topk_ratio) * 8 for l in leaves)
+    return sum(l.size * l.dtype.itemsize for l in leaves)

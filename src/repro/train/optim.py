@@ -1,0 +1,109 @@
+"""AdamW with mixed precision and optional gradient compression hooks.
+
+Implemented from scratch (no optax in the container).  Moments are fp32;
+parameters may be bf16 (master-weight style: an fp32 copy lives in the
+optimizer state and is the source of truth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    master_fp32: bool = True
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Any      # fp32 master weights (or None-pytree when disabled)
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio +
+                            (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params) if cfg.master_fp32 \
+        else None
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      master=master)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply(cfg: AdamWConfig, grads: Any, state: AdamWState,
+          params: Any) -> Tuple[Any, AdamWState]:
+    """One AdamW update. Returns (new_params, new_state)."""
+    step = state.step + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    src = state.master if cfg.master_fp32 else params
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return m, v, p32
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(src)
+    new_m, new_v, new_p32 = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p32.append(p2)
+    mu = jax.tree_util.tree_unflatten(treedef, new_m)
+    nu = jax.tree_util.tree_unflatten(treedef, new_v)
+    p32 = jax.tree_util.tree_unflatten(treedef, new_p32)
+
+    tgt_dtypes = jax.tree_util.tree_map(lambda p: p.dtype, params)
+    new_params = jax.tree_util.tree_map(
+        lambda p, dt: p.astype(dt), p32, tgt_dtypes)
+    new_state = AdamWState(step=step, mu=mu, nu=nu,
+                           master=p32 if cfg.master_fp32 else None)
+    return new_params, new_state

@@ -1,0 +1,68 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
+set here — smoke tests and benchmarks must see the single real device.
+Multi-device tests spawn subprocesses that set the flag themselves
+(tests/test_multidevice.py), and the dry-run sets it as its first lines.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import KernelGraph, KernelNode
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def random_dag(n: int, seed: int = 0, p: float = 0.3,
+               pin_frac: float = 0.0, num_devices: int = 2) -> KernelGraph:
+    """Connected random DAG with plausible kernel costs."""
+    import dataclasses
+    rng = random.Random(seed)
+    nodes = [KernelNode(
+        idx=i,
+        name=rng.choice(["dot_general", "exp", "reduce_sum", "add"]),
+        flops=rng.uniform(1e6, 5e9),
+        bytes_accessed=rng.uniform(1e4, 1e8),
+        out_bytes=rng.uniform(1e3, 1e7),
+        eqn_ids=(i,)) for i in range(n)]
+    edges = {}
+    for j in range(1, n):
+        i = rng.randrange(j)
+        edges[(i, j)] = rng.uniform(1e3, 1e7)
+        for i2 in range(j):
+            if rng.random() < p and (i2, j) not in edges:
+                edges[(i2, j)] = rng.uniform(1e3, 1e7)
+    if pin_frac:
+        for i in rng.sample(range(n), int(n * pin_frac)):
+            nodes[i] = dataclasses.replace(
+                nodes[i], pinned=rng.randrange(num_devices))
+    g = KernelGraph(nodes, edges, name=f"rand{n}s{seed}")
+    g.validate()
+    return g
+
+
+@pytest.fixture
+def small_mlp():
+    """(fn, args) tiny MLP used by analyzer/executor tests."""
+    from repro.core import marker
+
+    def model(x, params):
+        for i, (w1, w2) in enumerate(params):
+            x = marker.wrap(lambda y, a=w1, b=w2: jax.nn.gelu(y @ a) @ b,
+                            block="ffn", layer=i)(x)
+        return jnp.tanh(x)
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 9)
+    params = [(jax.random.normal(ks[2 * i], (32, 64)) * 0.1,
+               jax.random.normal(ks[2 * i + 1], (64, 32)) * 0.1)
+              for i in range(4)]
+    x = jax.random.normal(ks[8], (4, 32))
+    return model, (x, params)

@@ -1,0 +1,194 @@
+"""Planner: exactness of min-cut, quality of makespan, folding, elasticity."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bnb, planner
+from repro.core.costmodel import (GPU_A100, GPU_H100, GPU_L40S, TPU_V5E,
+                                  TPU_V5P)
+from repro.core.graph import KernelGraph, KernelNode
+from repro.core.makespan import MakespanProblem, fold_and_solve, \
+    solve_throughput
+
+from conftest import random_dag
+
+DEVS2 = [GPU_A100, GPU_L40S]
+DEVS3 = [GPU_A100, GPU_L40S, GPU_H100]
+
+
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(8))
+def test_mincut_matches_exact_latency(seed):
+    g = random_dag(10, seed=seed, pin_frac=0.2)
+    p = planner.plan(g, DEVS2, policy="latency", cache=False)
+    _, w_exact = bnb.solve_exact(g, DEVS2, objective="latency")
+    assert p.objective == pytest.approx(w_exact, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_alpha_expansion_matches_exact_3dev(seed):
+    g = random_dag(9, seed=seed, pin_frac=0.0)
+    p = planner.plan(g, DEVS3, policy="latency", cache=False)
+    _, w_exact = bnb.solve_exact(g, DEVS3, objective="latency")
+    assert p.objective <= w_exact * 1.001
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_throughput_heuristic_near_optimal(seed):
+    g = random_dag(10, seed=seed, pin_frac=0.2)
+    p = planner.plan(g, DEVS2, policy="throughput", cache=False,
+                     anneal_iters=2000)
+    _, w_exact = bnb.solve_exact(g, DEVS2, objective="throughput")
+    assert p.objective <= w_exact * 1.05
+    assert p.objective >= w_exact * (1 - 1e-9)      # never below optimum
+
+
+def test_pins_are_respected():
+    g = random_dag(12, seed=3, pin_frac=0.4)
+    for policy in ("latency", "throughput"):
+        p = planner.plan(g, DEVS2, policy=policy, cache=False)
+        for n in g.nodes:
+            if n.pinned is not None:
+                assert p.labels[n.idx] == n.pinned
+
+
+def test_every_kernel_assigned_exactly_once():
+    g = random_dag(30, seed=5)
+    p = planner.plan(g, DEVS2, policy="throughput", cache=False)
+    assert len(p.labels) == len(g)
+    assert set(p.labels) <= {0, 1}
+    covered = sorted(k for s in p.stages for k in s.node_ids)
+    assert covered == list(range(len(g)))
+
+
+def test_throughput_objective_definition():
+    """W = max_g max(T_g, M_g), the paper's pipelined stage time."""
+    g = random_dag(15, seed=7)
+    prob = MakespanProblem(g, DEVS2)
+    x = [k % 2 for k in range(len(g))]
+    T, M = prob.loads(x)
+    assert prob.objective(x) == pytest.approx(
+        max(max(T[0], M[0]), max(T[1], M[1])))
+
+
+def test_homogeneous_fallback_no_cut():
+    """With a near-zero interconnect the latency policy must degenerate
+    to single-device execution (paper §V-D robustness)."""
+    g = random_dag(14, seed=2)
+    p = planner.plan(g, DEVS2, policy="latency", cache=False,
+                     bw_override=1e3)        # 1 KB/s: transfers hopeless
+    assert p.cut_edges == 0
+    assert len(set(p.labels)) == 1
+
+
+def test_bandwidth_sensitivity_monotone_cut():
+    """Higher interconnect bandwidth must never reduce planned cut size
+    to the point of worse objective (robustness, paper Fig 11a)."""
+    g = random_dag(25, seed=11)
+    objs = []
+    for bw in (1e6, 1e9, 25e9, 200e9):
+        p = planner.plan(g, DEVS2, policy="latency", cache=False,
+                         bw_override=bw)
+        objs.append(p.objective)
+    assert objs == sorted(objs, reverse=True), \
+        "latency objective must improve (or hold) with more bandwidth"
+
+
+def test_layer_folding_quality():
+    """Folded solve must be close to the direct solve on repeated layers."""
+    base = random_dag(6, seed=4)
+    nodes, edges = [], {}
+    L = 6
+    for l in range(L):
+        off = l * len(base)
+        for n in base.nodes:
+            nodes.append(dataclasses.replace(n, idx=off + n.idx, layer=l))
+        for (i, j), b in base.edges.items():
+            edges[(off + i, off + j)] = b
+        if l > 0:
+            edges[(off - 1, off)] = 1e5
+    g = KernelGraph(nodes, edges, name="stack")
+    g.validate()
+
+    direct, w_direct = solve_throughput(g, DEVS2, anneal_iters=3000)
+    folded, w_folded = fold_and_solve(g, DEVS2, solve_throughput,
+                                      anneal_iters=3000)
+    # Folding trades solution quality for solve time (paper §V-D uses it
+    # purely to shrink the MILP); allow a 2x gap on adversarial toys.
+    assert w_folded <= w_direct * 2.0
+    prob = MakespanProblem(g, DEVS2)
+    assert prob.objective(folded) == pytest.approx(w_folded)
+
+
+def test_folding_reduces_solver_time():
+    base = random_dag(8, seed=9)
+    nodes, edges = [], {}
+    for l in range(24):
+        off = l * len(base)
+        for n in base.nodes:
+            nodes.append(dataclasses.replace(n, idx=off + n.idx, layer=l))
+        for (i, j), b in base.edges.items():
+            edges[(off + i, off + j)] = b
+        if l > 0:
+            edges[(off - 1, off)] = 1e5
+    g = KernelGraph(nodes, edges)
+    p_fold = planner.plan(g, DEVS2, policy="throughput", cache=False,
+                          use_folding=True)
+    p_full = planner.plan(g, DEVS2, policy="throughput", cache=False,
+                          use_folding=False, anneal_iters=1000)
+    assert p_fold.solve_seconds < p_full.solve_seconds
+
+
+def test_elastic_replan_on_device_loss():
+    g = random_dag(20, seed=6, pin_frac=0.2, num_devices=3)
+    p3 = planner.plan(g, DEVS3, policy="throughput", cache=False)
+    p2 = planner.replan_on_failure(g, DEVS3, lost={2}, old=p3, cache=False)
+    assert set(p2.labels) <= {0, 1}
+    assert len(p2.labels) == len(g)
+
+
+def test_plan_cache_hit():
+    g = random_dag(15, seed=8)
+    p1 = planner.plan(g, DEVS2, policy="throughput")
+    p2 = planner.plan(g, DEVS2, policy="throughput")
+    assert p1 is p2
+
+
+def test_tpu_pair_heterogeneity_is_exploited():
+    """On a v5p+v5e pair, compute-heavy kernels should prefer v5p and the
+    plan should beat all-on-one-device for a mixed workload."""
+    nodes = []
+    for i in range(16):
+        if i % 2 == 0:        # compute-bound GEMM
+            nodes.append(KernelNode(i, "dot_general", flops=2e11,
+                                    bytes_accessed=1e8, out_bytes=1e6,
+                                    eqn_ids=(i,)))
+        else:                 # memory-bound elementwise
+            nodes.append(KernelNode(i, "add", flops=1e8,
+                                    bytes_accessed=4e9, out_bytes=1e6,
+                                    eqn_ids=(i,)))
+    edges = {(i, i + 1): 1e5 for i in range(15)}
+    g = KernelGraph(nodes, edges)
+    devs = [TPU_V5P, TPU_V5E]
+    p = planner.plan(g, devs, policy="throughput", cache=False)
+    from repro.core.costmodel import graph_time_on
+    t_single = min(graph_time_on(g, d) for d in devs)
+    assert p.objective < t_single, "disaggregation must beat single device"
+
+
+# --------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
+def test_property_placement_valid_and_bounded(seed, n):
+    """Any plan: valid labels, pins honored, objective >= trivial LBs."""
+    g = random_dag(n, seed=seed, pin_frac=0.25)
+    p = planner.plan(g, DEVS2, policy="throughput", cache=False,
+                     anneal_iters=300)
+    assert len(p.labels) == n
+    for nd in g.nodes:
+        if nd.pinned is not None:
+            assert p.labels[nd.idx] == nd.pinned
+    prob = MakespanProblem(g, DEVS2)
+    lb = sum(min(prob.t[k]) for k in range(n)) / 2
+    assert p.objective >= lb * (1 - 1e-9)

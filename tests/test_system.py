@@ -1,0 +1,146 @@
+"""End-to-end behaviour tests of the paper's system.
+
+The full Tessera pipeline — analyze a real model's decode step, pin the
+KV state, plan across a heterogeneous device pair, execute disaggregated,
+adapt policy online — exercised exactly as the serving launcher wires it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import analyzer, planner
+from repro.core.costmodel import TPU_V5E, TPU_V5P, GPU_A100, GPU_L40S
+from repro.core.executor import build_executable
+from repro.core.monitor import MonitorConfig, OnlineMonitor
+from repro.core.simulator import simulate_offline
+from repro.models import model as M
+
+
+def _traced_decode(arch="llama3_8b"):
+    cfg = dataclasses.replace(C.get_smoke(arch), dtype="float32")
+    params = M.init_params(cfg)
+    B, maxlen = 2, 32
+    cache = M.init_cache(cfg, B, maxlen)
+    toks = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+
+    def step(p, c, t, q):
+        return M.decode_step(p, cfg, t, c, q, scan_layers=False)
+
+    traced = analyzer.analyze(step, params, cache, toks, pos,
+                              state_argnums=(1,))
+    return cfg, params, cache, traced, step
+
+
+def test_full_tessera_flow_decode_correctness():
+    """analyze -> pin KV -> plan -> disaggregated execution must produce
+    exactly the jitted single-device logits, for both policies."""
+    cfg, params, cache, traced, step = _traced_decode()
+    g = analyzer.pin_nodes(
+        traced.graph, traced.state_readers | traced.state_writers, 0)
+    traced = traced.with_graph(g)
+    toks = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.array([4, 7], jnp.int32)
+    want_logits, want_cache = jax.jit(step)(params, cache, toks, pos)
+    for policy in ("throughput", "latency"):
+        plan = planner.plan(g, [TPU_V5P, TPU_V5E], policy=policy,
+                            cache=False)
+        exe = build_executable(traced, plan)
+        logits, new_cache = exe(params, cache, toks, pos)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(want_logits),
+                                   rtol=1e-5, atol=1e-5)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
+            new_cache, want_cache)
+
+
+def test_kv_pinning_constrains_placement():
+    cfg, params, cache, traced, _ = _traced_decode()
+    pinned = traced.state_readers | traced.state_writers
+    assert pinned, "decode step must touch KV state"
+    g = analyzer.pin_nodes(traced.graph, pinned, 1)
+    plan = planner.plan(g, [TPU_V5P, TPU_V5E], cache=False)
+    for nid in pinned:
+        assert plan.labels[nid] == 1
+
+
+def test_kernel_heterogeneity_exists_in_real_model():
+    """Paper §II-B: a real model's kernels must show mixed device
+    preference on a heterogeneous pair (some faster on each).  Traced at
+    full width via ShapeDtypeStructs (no allocation) so GEMMs are
+    genuinely compute-bound and elementwise/norms memory-bound."""
+    cfg = dataclasses.replace(C.get("llama3_8b"), num_layers=2)
+    params = jax.eval_shape(lambda: M.init_params(cfg))
+    toks = jax.ShapeDtypeStruct((1, 512), jnp.int32)
+
+    def fwd(p, t):
+        return M.forward_logits(p, cfg, t, scan_layers=False)
+
+    traced = analyzer.analyze(fwd, params, toks)
+    a, b = GPU_A100, GPU_L40S
+    prefer_a = prefer_b = 0
+    t_a = t_b = 0.0
+    for n in traced.graph.nodes:
+        ta, tb = a.kernel_time(n), b.kernel_time(n)
+        t_a += ta
+        t_b += tb
+        if ta < tb:
+            prefer_a += 1
+        else:
+            prefer_b += 1
+    # mixed preference (paper Fig. 2: ~45-70% of kernels favor the
+    # cheaper GPU depending on workload)
+    assert prefer_a > 0 and prefer_b > 0, (prefer_a, prefer_b)
+
+
+def test_disaggregation_beats_single_device_in_model():
+    """Paper headline: the heterogeneous pair outperforms either device
+    alone under the planner's cost model (steady-state pipelined)."""
+    _, _, _, traced, _ = _traced_decode("gpt_oss_20b")
+    from repro.core.costmodel import graph_time_on
+    devs = [GPU_A100, GPU_L40S]
+    plan = planner.plan(traced.graph, devs, policy="throughput",
+                        cache=False)
+    best_single = min(graph_time_on(traced.graph, d) for d in devs)
+    assert plan.bottleneck < best_single
+    # and the DES agrees within the plan's steady-state ceiling
+    sim = simulate_offline(traced.graph, plan, devs, num_requests=64)
+    assert sim.throughput > 1.0 / best_single
+
+
+def test_online_policy_switch_roundtrip():
+    """Monitor must move latency->throughput under load and back."""
+    mon = OnlineMonitor(MonitorConfig(window=1.0, beta=1.5))
+    for i in range(4):
+        mon.record_request(i * 0.1, request_latency=0.5,
+                           exec_latency=0.05)
+    mon.tick(1.0)
+    assert mon.policy == "throughput"
+    for i in range(4):
+        mon.record_request(1.1 + i * 0.1, request_latency=0.055,
+                           exec_latency=0.05)
+    mon.tick(2.5)
+    assert mon.policy == "latency"
+    assert mon.switches == 2
+
+
+def test_plan_solver_speed_matches_paper_scale():
+    """Paper §III-B: |K| ~ 500 solves in ~20ms (Gurobi).  Our exact
+    min-cut must solve a 500-node DDG well under 1s."""
+    import time
+    import sys
+    sys.path.insert(0, "tests")
+    from conftest import random_dag
+    g = random_dag(500, seed=1, p=0.02)
+    t0 = time.perf_counter()
+    p = planner.plan(g, [GPU_A100, GPU_L40S], policy="latency",
+                     cache=False)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, f"latency solve took {dt:.3f}s"
+    assert len(p.labels) == 500

@@ -1,0 +1,107 @@
+"""Cluster scaling: throughput + cost-efficiency vs replica count & mix.
+
+  PYTHONPATH=src python benchmarks/cluster_scaling.py
+
+Reproduces the paper's cluster-scale claim shape on the discrete-event
+model: aggregate throughput and cost-efficiency (req/$) as a function
+of the number of heterogeneous replica groups (up to 16 devices) and of
+the heterogeneity mix, for round-robin vs workload-aware (JSED)
+routing.  The workload-aware router must beat round-robin on the
+cross-heterogeneous mixes: round-robin gives every group equal load, so
+the slowest group queues without bound while fast groups idle; JSED
+rate-matches load to capability (see repro/serving/router.py for the
+scoring policy).
+
+Output follows the repo CSV contract: ``name,us_per_call,derived`` with
+mean request latency (us) in the middle column and the headline
+quantity (throughput req/s, cost-eff req/$, speedup ratios) in
+``derived``.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from common import request_graph
+from repro.core.monitor import MonitorConfig
+from repro.serving.cluster import TesseraCluster
+from repro.serving.router import JSEDRouter, RoundRobinRouter
+from repro.serving.workload import make_trace
+
+Row = Tuple[str, float, str]
+
+ARCH = "llama3_8b"
+LAYERS = 2                      # traced layers (costs are per-layer exact)
+BASE_PROMPT, BASE_OUT = 1024, 128
+N_REQ = 400
+
+# Heterogeneity mixes: each entry is the device-pair cycle replicas are
+# drawn from.  "paper-pairs" interleaves the paper's three local pairs —
+# maximum cross-replica heterogeneity.
+MIXES = {
+    "a100-l40s": [("a100", "l40s")],
+    "a100-l40s+h100-rtx": [("a100", "l40s"), ("h100", "rtxpro6000")],
+    "paper-pairs": [("a100", "l40s"), ("h100", "rtxpro6000"),
+                    ("b200", "h100")],
+}
+REPLICA_COUNTS = (1, 2, 4, 8)           # x2 devices each -> up to 16
+
+
+def build_cluster(mix: Sequence[Tuple[str, str]],
+                  n_replicas: int) -> TesseraCluster:
+    groups = [list(mix[i % len(mix)]) for i in range(n_replicas)]
+    g = request_graph(ARCH, prompt=BASE_PROMPT, n_out=BASE_OUT,
+                      layers=LAYERS)
+    return TesseraCluster(g, groups, base_prompt=BASE_PROMPT,
+                          base_output=BASE_OUT,
+                          monitor_cfg=MonitorConfig(window=0.050),
+                          anneal_iters=800)
+
+
+def run_mix(mix_name: str, mix, trace_kind: str = "poisson",
+            load: float = 1.1) -> List[Row]:
+    rows: List[Row] = []
+    for n_rep in REPLICA_COUNTS:
+        cluster = build_cluster(mix, n_rep)
+        rate = load * cluster.capacity
+        trace = make_trace(trace_kind, rate, N_REQ, seed=17)
+        res = {}
+        for router in (RoundRobinRouter(), JSEDRouter()):
+            r = cluster.simulate(trace, router)
+            res[router.name] = r
+            tag = (f"cluster.{mix_name}.{trace_kind}.r{n_rep}"
+                   f".g{cluster.num_devices}.{router.name}")
+            rows.append((f"{tag}.throughput", r.mean_latency * 1e6,
+                         f"{r.throughput:.2f}req/s"))
+            rows.append((f"{tag}.cost_eff", r.p(0.95) * 1e6,
+                         f"{r.cost_efficiency:.1f}req/$"))
+        ratio = (res["jsed"].throughput
+                 / max(res["round_robin"].throughput, 1e-12))
+        lat_ratio = (res["round_robin"].mean_latency
+                     / max(res["jsed"].mean_latency, 1e-12))
+        rows.append((f"cluster.{mix_name}.{trace_kind}.r{n_rep}"
+                     f".jsed_over_rr", 0.0,
+                     f"thr_x{ratio:.3f}|lat_x{lat_ratio:.3f}"))
+    return rows
+
+
+def cluster_scaling() -> List[Row]:
+    rows: List[Row] = []
+    for mix_name, mix in MIXES.items():
+        rows += run_mix(mix_name, mix, "poisson")
+    # burstiness stresses the router + monitor on the most hetero mix
+    rows += run_mix("paper-pairs", MIXES["paper-pairs"], "bursty")
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in cluster_scaling():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

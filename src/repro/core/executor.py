@@ -125,9 +125,12 @@ class StagedExecutable:
                     or v in graph_out_vars]
             effects = frozenset().union(
                 *[eqn.effects for eqn in eqns]) if eqns else frozenset()
+            # debug_info must be dropped: it describes the ORIGINAL
+            # jaxpr's arity, and jax asserts len(arg_names) == invars /
+            # len(result_paths) == outvars on construction.
             sub = jex_core.Jaxpr(
                 constvars=[], invars=list(ext), outvars=list(outs),
-                eqns=eqns, effects=effects, debug_info=jaxpr.debug_info)
+                eqns=eqns, effects=effects)
             fn = jax.jit(jex_core.jaxpr_as_fun(jex_core.ClosedJaxpr(sub, [])))
             dev = self.device_map[st.device] if self.device_map else None
             self.stages.append(CompiledStage(

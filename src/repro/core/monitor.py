@@ -20,12 +20,19 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class MonitorConfig:
+    # Frozen: MonitorConfig() is used as a default argument (one shared
+    # instance per process), so it must be immutable.
     window: float = 0.300        # W  (paper default 300 ms)
     beta: float = 1.5            # queueing threshold (paper default 1.5)
     switch_stall: float = 0.030  # worker sync stall per switch (paper ~30ms)
     min_samples: int = 1
+    # Hysteresis band around beta: switch to throughput only above
+    # beta*(1+h), back to latency only below beta*(1-h).  A ratio
+    # hovering at beta would otherwise flap every window, paying the
+    # switch stall each time for no routing benefit.
+    hysteresis: float = 0.05
 
 
 class OnlineMonitor:
@@ -68,7 +75,14 @@ class OnlineMonitor:
         if len(self._win_req) >= self.cfg.min_samples:
             ratio = (sum(self._win_req) / len(self._win_req)) / max(
                 sum(self._win_exec) / len(self._win_exec), 1e-12)
-            target = "throughput" if ratio > self.cfg.beta else "latency"
+            up = self.cfg.beta * (1.0 + self.cfg.hysteresis)
+            down = self.cfg.beta * (1.0 - self.cfg.hysteresis)
+            if ratio > up:
+                target = "throughput"
+            elif ratio < down:
+                target = "latency"
+            else:                      # inside the band: hold (no flap)
+                target = self.policy
             if target != self.policy:
                 self.policy = target
                 self.switches += 1

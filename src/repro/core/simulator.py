@@ -65,6 +65,12 @@ class SimResult:
     device_busy: List[float]        # compute-busy seconds per device
     link_busy: List[float]          # ingress-busy seconds per device
     switches: int = 0
+    # Dispatch log: (kind, device, request, start, end) per scheduled
+    # unit, in dispatch order.  Simulated time is pure arithmetic on the
+    # inputs, so two runs with identical seed+trace+plan must produce
+    # bit-identical logs (tests/test_monitor_sim.py asserts this).
+    events: List[Tuple[int, int, int, float, float]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def throughput(self) -> float:
@@ -113,6 +119,7 @@ class _DES:
         link and device queues pack independently (committing both at
         once reserves idle gaps and under-utilizes both)."""
         n = len(arrivals)
+        events: List[Tuple[int, int, int, float, float]] = []
         # unit list: (kind 0=link/1=dev, device, duration)
         units: List[Tuple[int, int, float]] = []
         for t in self.tasks:
@@ -162,6 +169,7 @@ class _DES:
             else:
                 self.dev_free[dev] = end
                 self.dev_busy[dev] += dur
+            events.append((kind, dev, r, start, end))
             ready_at[r] = end
             cursor[r] += 1
             if cursor[r] >= total_units:
@@ -173,7 +181,7 @@ class _DES:
         lats = [finish[r] - arrivals[r] for r in range(n)]
         return SimResult(makespan=makespan, completed=n, latencies=lats,
                          device_busy=self.dev_busy,
-                         link_busy=self.link_busy)
+                         link_busy=self.link_busy, events=events)
 
 
 # --------------------------------------------------------------------- #
@@ -269,3 +277,221 @@ def simulate_online(graph: KernelGraph, plans: Dict[str, Plan], devices,
                      device_busy=[0.0] * len(devices),
                      link_busy=[0.0] * len(devices),
                      switches=monitor.switches)
+
+
+# ===================================================================== #
+# Cluster composition: many replicas, each its own discrete-event model #
+# ===================================================================== #
+#
+# A *replica* is one disaggregated device group executing one Plan (its
+# own compute + ingress-link servers, exactly the single-replica model
+# above).  The cluster simulator composes N replica models under a
+# router: arrivals are processed in time order, the router picks a
+# replica using only information available at the arrival instant
+# (queue backlog, predicted service time), and the request's stage
+# units are scheduled FCFS against that replica's resource timelines.
+# Compute and communication still overlap (separate servers), and
+# consecutive requests pipeline through the replica's stages.
+#
+# Per-request heterogeneity: stage-unit durations are scaled by how
+# much longer/shorter the request's prompt and output are than the
+# lengths the plan's DDG was traced with (prefill work ~ prompt tokens,
+# decode work ~ output tokens).
+
+@dataclasses.dataclass(frozen=True)
+class ClusterRequest:
+    """Router-visible request: scales are relative to the plan's DDG."""
+    rid: int
+    arrival: float
+    scale_prompt: float = 1.0       # prefill work multiplier
+    scale_output: float = 1.0       # decode work multiplier
+    session: Optional[int] = None   # decode-session affinity key
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaUnit:
+    kind: int           # 0 = ingress link, 1 = compute
+    device: int         # replica-local device index
+    duration: float     # seconds at scale 1.0
+    decode_frac: float  # fraction of the unit scaled by scale_output
+
+    def scaled(self, scale_prompt: float, scale_output: float) -> float:
+        return self.duration * (self.decode_frac * scale_output
+                                + (1.0 - self.decode_frac) * scale_prompt)
+
+
+def replica_units(graph: KernelGraph, plan: Plan, devices,
+                  bw_override: Optional[float] = None) -> List[ReplicaUnit]:
+    """Stage tasks -> schedulable units with decode fractions."""
+    units: List[ReplicaUnit] = []
+    for task, stage in zip(stage_tasks(graph, plan, devices, bw_override),
+                           plan.stages):
+        comp_total = sum(devices[stage.device].kernel_time(graph.nodes[k])
+                         for k in stage.node_ids)
+        comp_decode = sum(devices[stage.device].kernel_time(graph.nodes[k])
+                          for k in stage.node_ids
+                          if graph.nodes[k].phase == "decode")
+        frac = comp_decode / comp_total if comp_total > 0 else 0.0
+        if task.ingress > 0:
+            units.append(ReplicaUnit(0, task.device, task.ingress, frac))
+        units.append(ReplicaUnit(1, task.device, task.compute, frac))
+    return units
+
+
+class ReplicaModel:
+    """Incremental discrete-event model of one replica.
+
+    Unlike :class:`_DES` (which needs the full arrival list up front),
+    requests are submitted one at a time so a router can interleave
+    scheduling decisions with queue evolution.  Each resource is a FCFS
+    server; a submitted request walks its stage units in topological
+    order, starting each unit at max(previous unit end, resource free).
+    """
+
+    def __init__(self, idx: int, num_devices: int,
+                 unit_sets: Dict[str, List[ReplicaUnit]],
+                 policy: str = "latency",
+                 monitor: Optional[OnlineMonitor] = None,
+                 price: float = 0.0):
+        assert policy in unit_sets, f"no unit set for policy {policy!r}"
+        self.idx = idx
+        self.num_devices = num_devices
+        self.unit_sets = unit_sets
+        self.policy = policy
+        self.monitor = monitor
+        self.price = price              # $/hr of this device group
+        self.dev_free = [0.0] * num_devices
+        self.link_free = [0.0] * num_devices
+        self.dev_busy = [0.0] * num_devices
+        self.link_busy = [0.0] * num_devices
+        self.completed = 0
+        self.switches = 0
+        self._finish: List[float] = []          # heap of inflight finishes
+
+    # -------------------------------------------------------------- #
+    def predicted_service(self, req: ClusterRequest,
+                          policy: Optional[str] = None) -> float:
+        """Unqueued execution latency of ``req`` on this replica."""
+        units = self.unit_sets[policy or self.policy]
+        return sum(u.scaled(req.scale_prompt, req.scale_output)
+                   for u in units)
+
+    def backlog(self, now: float) -> float:
+        """Seconds until the most-loaded resource drains (queue delay
+        proxy: a new request cannot finish before its bottleneck
+        resource frees up)."""
+        worst = max(max(self.dev_free), max(self.link_free))
+        return max(0.0, worst - now)
+
+    def queue_len(self, now: float) -> int:
+        while self._finish and self._finish[0] <= now:
+            heapq.heappop(self._finish)
+        return len(self._finish)
+
+    # -------------------------------------------------------------- #
+    def submit(self, req: ClusterRequest,
+               events: Optional[List[Tuple]] = None) -> float:
+        """Schedule the request; returns its finish time."""
+        t = req.arrival
+        for u in self.unit_sets[self.policy]:
+            dur = u.scaled(req.scale_prompt, req.scale_output)
+            free = self.link_free if u.kind == 0 else self.dev_free
+            busy = self.link_busy if u.kind == 0 else self.dev_busy
+            start = max(t, free[u.device])
+            end = start + dur
+            free[u.device] = end
+            busy[u.device] += dur
+            if events is not None:
+                events.append((self.idx, req.rid, u.kind, u.device,
+                               start, end))
+            t = end
+        heapq.heappush(self._finish, t)
+        self.completed += 1
+        return t
+
+    def maybe_switch(self, now: float) -> bool:
+        """Adopt the monitor's policy; a switch stalls all workers for
+        ``switch_stall`` at the next iteration boundary (modeled as a
+        bump of every resource timeline)."""
+        if self.monitor is None or self.monitor.policy == self.policy:
+            return False
+        if self.monitor.policy not in self.unit_sets:
+            return False
+        self.policy = self.monitor.policy
+        stall = self.monitor.cfg.switch_stall
+        for free in (self.dev_free, self.link_free):
+            for d in range(self.num_devices):
+                free[d] = max(free[d], now) + stall
+        self.switches += 1
+        return True
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    makespan: float
+    completed: int
+    latencies: List[float]              # in arrival order
+    assignments: List[int]              # replica chosen per request
+    per_replica_completed: List[int]
+    per_replica_busy: List[float]       # summed compute-busy seconds
+    switches: int
+    events: List[Tuple]                 # (replica, rid, kind, dev, t0, t1)
+    price_rate: float = 0.0             # $/hr of all device groups
+
+    @property
+    def throughput(self) -> float:
+        return self.completed / max(self.makespan, 1e-12)
+
+    @property
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / max(len(self.latencies), 1)
+
+    def p(self, q: float) -> float:
+        xs = sorted(self.latencies)
+        if not xs:
+            return 0.0
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+    @property
+    def cost_efficiency(self) -> float:
+        """Requests per dollar ( throughput / $-rate ), paper Table III's
+        cost-efficiency axis generalized to replica groups."""
+        return self.throughput * 3600.0 / max(self.price_rate, 1e-12)
+
+
+def simulate_cluster(replicas: Sequence[ReplicaModel],
+                     trace: Sequence[ClusterRequest],
+                     route_fn) -> ClusterResult:
+    """Composed cluster simulation under ``route_fn``.
+
+    ``route_fn(req, replicas, now) -> replica index`` is consulted once
+    per request at its arrival instant.  Requests must be sorted by
+    arrival.  Deterministic: identical (trace, plans, router) produce a
+    bit-identical event log and makespan.
+    """
+    events: List[Tuple] = []
+    latencies: List[float] = []
+    assignments: List[int] = []
+    max_finish = 0.0
+    for req in trace:
+        idx = route_fn(req, replicas, req.arrival)
+        rep = replicas[idx]
+        finish = rep.submit(req, events)
+        assignments.append(idx)
+        latencies.append(finish - req.arrival)
+        max_finish = max(max_finish, finish)
+        if rep.monitor is not None:
+            rep.monitor.record_request(
+                finish, finish - req.arrival, rep.predicted_service(req))
+            rep.maybe_switch(req.arrival)
+    t0 = min((r.arrival for r in trace), default=0.0)
+    return ClusterResult(
+        makespan=max_finish - t0 if trace else 0.0,
+        completed=len(trace),
+        latencies=latencies,
+        assignments=assignments,
+        per_replica_completed=[r.completed for r in replicas],
+        per_replica_busy=[sum(r.dev_busy) for r in replicas],
+        switches=sum(r.switches for r in replicas),
+        events=events,
+        price_rate=sum(r.price for r in replicas))

@@ -3,11 +3,27 @@
 Defined as functions (never module-level constants) so importing this
 module never touches jax device state — the dry-run must set XLA_FLAGS
 before the first jax call.
+
+``AxisType`` landed in jax 0.5; on older jax (0.4.x) ``jax.make_mesh``
+has no ``axis_types`` parameter and every axis is implicitly Auto, so
+we gate the import and only pass the kwarg when it exists.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:
+    from jax.sharding import AxisType
+except ImportError:                      # jax < 0.5: all axes are Auto
+    AxisType = None
+
+
+def _make(shape, axes) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -16,15 +32,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     crosses DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes) -> Mesh:
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def host_device_mesh(n: int = 1, axis: str = "data") -> Mesh:
     """Small CPU mesh for tests (requires host-platform device count)."""
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return _make((n,), (axis,))

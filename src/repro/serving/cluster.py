@@ -1,0 +1,163 @@
+"""Cluster-scale serving: N heterogeneous Tessera replica groups.
+
+A *replica group* is one disaggregated device set (e.g. an A100+L40s
+pair) running the model under its own Plan; a cluster is many such
+groups — possibly of different device types and sizes — behind a
+router (``repro.serving.router``).  This is the layer the paper's
+16-GPU experiments live at: per-replica kernel-granularity
+disaggregation (the planner), cross-replica workload-aware routing
+(HexGen-2-style rate matching), and per-replica online policy
+switching (the monitor).
+
+Per replica group this module precomputes:
+  * a Plan per policy ("latency", "throughput") via the planner's
+    process-wide plan cache — the same cache elastic re-planning uses,
+    so a monitor-triggered policy flip is a cache hit, not a re-solve,
+  * the stage-unit timeline for the discrete-event model
+    (``repro.core.simulator.ReplicaModel``),
+  * an :class:`OnlineMonitor` that flips the replica between policies
+    when its queueing ratio crosses beta (with hysteresis).
+
+``simulate`` builds FRESH replica state each call, so one cluster can
+be replayed under different routers/traces for apples-to-apples
+comparisons; everything downstream is deterministic in (trace, plans,
+router).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import planner
+from repro.core.costmodel import CATALOG, DeviceSpec
+from repro.core.graph import KernelGraph
+from repro.core.monitor import MonitorConfig, OnlineMonitor
+from repro.core.simulator import (ClusterRequest, ClusterResult,
+                                  ReplicaModel, ReplicaUnit,
+                                  replica_units, simulate_cluster)
+from repro.serving.workload import WorkloadRequest
+
+POLICIES = ("latency", "throughput")
+
+
+def resolve_devices(group: Sequence) -> List[DeviceSpec]:
+    """Accept DeviceSpecs or catalog names."""
+    out = []
+    for d in group:
+        if hasattr(d, "kernel_time"):
+            out.append(d)
+        elif d in CATALOG:
+            out.append(CATALOG[d])
+        else:
+            raise ValueError(f"unknown device {d!r}; "
+                             f"pick from {sorted(CATALOG)}")
+    return out
+
+
+@dataclasses.dataclass
+class ReplicaGroup:
+    """Static description + per-policy plans of one device group."""
+
+    idx: int
+    devices: List[DeviceSpec]
+    plans: Dict[str, "planner.Plan"]
+    units: Dict[str, List[ReplicaUnit]]
+
+    @property
+    def price(self) -> float:
+        return sum(d.price for d in self.devices)
+
+    def describe(self) -> str:
+        names = "+".join(d.name for d in self.devices)
+        obj = {p: f"{pl.objective * 1e3:.2f}ms"
+               for p, pl in self.plans.items()}
+        return f"replica[{self.idx}] {names} {obj}"
+
+
+class TesseraCluster:
+    """N replica groups serving one model graph.
+
+    ``replica_devices``: one device list (specs or catalog names) per
+    replica group, e.g. ``[["a100", "l40s"], ["h100", "rtxpro6000"]]``.
+    ``base_prompt``/``base_output`` are the token counts the graph was
+    traced with; per-request stage times scale relative to them.
+    """
+
+    def __init__(self, graph: KernelGraph,
+                 replica_devices: Sequence[Sequence],
+                 *,
+                 base_prompt: int = 1024,
+                 base_output: int = 128,
+                 policies: Tuple[str, ...] = POLICIES,
+                 monitor_cfg: Optional[MonitorConfig] = MonitorConfig(),
+                 initial_policy: str = "latency",
+                 bw_override: Optional[float] = None,
+                 anneal_iters: int = 1000):
+        assert replica_devices, "need at least one replica group"
+        assert initial_policy in policies
+        self.graph = graph
+        self.base_prompt = max(base_prompt, 1)
+        self.base_output = max(base_output, 1)
+        self.monitor_cfg = monitor_cfg
+        self.initial_policy = initial_policy
+        self.groups: List[ReplicaGroup] = []
+        for i, group in enumerate(replica_devices):
+            devices = resolve_devices(group)
+            # Identical device sets hit the planner's plan cache, so a
+            # 16-device cluster of 8 identical pairs solves each policy
+            # once — the same path monitor-triggered re-planning takes.
+            plans = {pol: planner.plan(graph, devices, policy=pol,
+                                       bw_override=bw_override,
+                                       anneal_iters=anneal_iters)
+                     for pol in policies}
+            units = {pol: replica_units(graph, plan, devices, bw_override)
+                     for pol, plan in plans.items()}
+            self.groups.append(ReplicaGroup(i, devices, plans, units))
+
+    # -------------------------------------------------------------- #
+    @property
+    def num_devices(self) -> int:
+        return sum(len(g.devices) for g in self.groups)
+
+    @property
+    def price_rate(self) -> float:
+        return sum(g.price for g in self.groups)
+
+    @property
+    def capacity(self) -> float:
+        """Aggregate steady-state throughput (req/s at scale 1): the sum
+        of each group's pipelined ceiling 1 / max_g W_g."""
+        return sum(1.0 / g.plans["throughput"].bottleneck
+                   for g in self.groups)
+
+    def describe(self) -> str:
+        return "\n".join(g.describe() for g in self.groups)
+
+    # -------------------------------------------------------------- #
+    def to_cluster_request(self, req: WorkloadRequest) -> ClusterRequest:
+        return ClusterRequest(
+            rid=req.rid, arrival=req.arrival,
+            scale_prompt=req.prompt_tokens / self.base_prompt,
+            scale_output=req.output_tokens / self.base_output,
+            session=req.session)
+
+    def build_replicas(self) -> List[ReplicaModel]:
+        """Fresh mutable replica state (queues, monitors, policies)."""
+        replicas = []
+        for g in self.groups:
+            monitor = (OnlineMonitor(self.monitor_cfg,
+                                     initial_policy=self.initial_policy)
+                       if self.monitor_cfg is not None else None)
+            replicas.append(ReplicaModel(
+                g.idx, len(g.devices), g.units,
+                policy=self.initial_policy, monitor=monitor,
+                price=g.price))
+        return replicas
+
+    def simulate(self, trace: Sequence[WorkloadRequest],
+                 router) -> ClusterResult:
+        """Route + replay ``trace``; ``router`` is any callable
+        ``(req, replicas, now) -> index`` (see serving/router.py)."""
+        creqs = [self.to_cluster_request(r)
+                 for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
+        return simulate_cluster(self.build_replicas(), creqs, router)

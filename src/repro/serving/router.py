@@ -1,0 +1,121 @@
+"""Workload-aware request routing across heterogeneous Tessera replicas.
+
+Scoring policy (join-shortest-expected-delay, JSED)
+---------------------------------------------------
+Each replica group runs its own Plan over its own device set, so the
+*same* request costs a different amount on different replicas — an
+H100+RTX pair drains a long-prompt request far faster than an A100+L40s
+pair.  The router therefore scores every candidate replica with the
+cost model the planner itself optimizes:
+
+    score(replica) = backlog(replica, now) + predicted_service(req)
+
+  * ``backlog`` — seconds until the replica's most-loaded resource
+    (compute server or ingress link) frees up: the queueing delay a new
+    arrival would actually see,
+  * ``predicted_service`` — the unqueued execution latency of *this*
+    request on *that* replica, from the per-stage cost model with the
+    request's prompt/output lengths scaled in.
+
+and joins the minimum — an expected-completion-time rule.  With
+homogeneous replicas and equal-sized requests it degenerates to
+join-shortest-queue; with heterogeneous replicas it rate-matches load
+to capability (fast groups get proportionally more and bigger
+requests), which is what lets the workload-aware router beat
+round-robin on heterogeneous mixes (benchmarks/cluster_scaling.py).
+
+Decode-session affinity: multi-turn requests carrying a ``session`` id
+re-join the replica that holds their KV/decode state unless its backlog
+exceeds the best candidate's by ``affinity_break`` seconds — then the
+session migrates (modeling a KV refetch as preferable to queueing).
+
+Routers only read replica state; :func:`repro.core.simulator
+.simulate_cluster` (or a real dispatch loop) owns the clock.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+from repro.core.simulator import ClusterRequest, ReplicaModel
+
+
+class Router:
+    """Interface: pick a replica index for a request at time ``now``."""
+
+    name = "base"
+
+    def route(self, req: ClusterRequest,
+              replicas: Sequence[ReplicaModel], now: float) -> int:
+        raise NotImplementedError
+
+    # simulate_cluster duck-types the router as a plain callable
+    def __call__(self, req, replicas, now) -> int:
+        return self.route(req, replicas, now)
+
+
+class RoundRobinRouter(Router):
+    """Workload-oblivious baseline: equal request counts per replica."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, req, replicas, now) -> int:
+        idx = self._next % len(replicas)
+        self._next += 1
+        return idx
+
+
+class LeastLoadedRouter(Router):
+    """Join-shortest-queue on backlog seconds; size- and
+    speed-oblivious (does not model the request's own cost)."""
+
+    name = "least_loaded"
+
+    def route(self, req, replicas, now) -> int:
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].backlog(now), i))
+
+
+class JSEDRouter(Router):
+    """Join-shortest-expected-delay with decode-session affinity."""
+
+    name = "jsed"
+
+    def __init__(self, affinity_break: float = float("inf")):
+        # Migrate a session when staying costs this many more seconds
+        # of backlog than the best replica; inf = never migrate.
+        self.affinity_break = affinity_break
+        self._session_home: Dict[int, int] = {}
+
+    def score(self, req: ClusterRequest, replica: ReplicaModel,
+              now: float) -> float:
+        return replica.backlog(now) + replica.predicted_service(req)
+
+    def route(self, req, replicas, now) -> int:
+        best = min(range(len(replicas)),
+                   key=lambda i: (self.score(req, replicas[i], now), i))
+        if req.session is not None:
+            home = self._session_home.get(req.session)
+            if home is not None:
+                stay_cost = replicas[home].backlog(now)
+                move_cost = replicas[best].backlog(now)
+                if stay_cost - move_cost <= self.affinity_break:
+                    return home
+            self._session_home[req.session] = best
+        return best
+
+
+ROUTERS = {
+    cls.name: cls
+    for cls in (RoundRobinRouter, LeastLoadedRouter, JSEDRouter)
+}
+
+
+def make_router(name: str, **kw) -> Router:
+    try:
+        return ROUTERS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown router {name!r}; "
+                         f"pick from {sorted(ROUTERS)}") from None

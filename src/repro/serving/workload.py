@@ -1,0 +1,216 @@
+"""Open-loop trace generation for cluster-scale serving experiments.
+
+Real serving traffic is open-loop (arrivals do not wait for service) and
+bursty; the cluster benchmarks and tests drive the simulator with traces
+from three arrival processes:
+
+  * ``poisson``  — homogeneous Poisson at ``rate`` req/s,
+  * ``bursty``   — 2-state MMPP: ON periods at ``burst_factor`` x the
+    base rate alternating with quiet OFF periods (same long-run rate),
+  * ``diurnal``  — sinusoidally modulated rate (a compressed day/night
+    cycle), sampled by thinning against the peak rate.
+
+Request sizes come from a mixture of named request classes (chat,
+summarization, generation) with lognormal prompt lengths and geometric
+output lengths — heavy-tailed, as production traces are.  Requests can
+continue an existing *session* (multi-turn chat): the router uses the
+session id for decode/KV affinity.
+
+Everything is driven by ``random.Random(seed)`` — traces are
+deterministic and portable across runs and machines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadRequest:
+    rid: int
+    arrival: float              # seconds since trace start
+    prompt_tokens: int
+    output_tokens: int
+    session: Optional[int] = None   # multi-turn conversation id
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestClass:
+    """One mode of the length mixture."""
+    name: str
+    weight: float
+    prompt_median: int          # lognormal median of prompt length
+    prompt_sigma: float         # lognormal shape
+    output_mean: int            # geometric mean of output length
+
+
+# Default mixture, loosely shaped like public serving traces: mostly
+# chat, some long-prompt summarization, some long-output generation.
+DEFAULT_MIX: Tuple[RequestClass, ...] = (
+    RequestClass("chat", 0.70, prompt_median=256, prompt_sigma=0.8,
+                 output_mean=128),
+    RequestClass("summarize", 0.15, prompt_median=2048, prompt_sigma=0.5,
+                 output_mean=64),
+    RequestClass("generate", 0.15, prompt_median=128, prompt_sigma=0.6,
+                 output_mean=512),
+)
+
+_MAX_PROMPT = 16384
+_MAX_OUTPUT = 4096
+
+
+def _sample_lengths(rng: random.Random,
+                    mix: Sequence[RequestClass]) -> Tuple[int, int]:
+    r = rng.random() * sum(c.weight for c in mix)
+    acc = 0.0
+    cls = mix[-1]
+    for c in mix:
+        acc += c.weight
+        if r <= acc:
+            cls = c
+            break
+    prompt = int(cls.prompt_median * math.exp(
+        rng.gauss(0.0, cls.prompt_sigma)))
+    output = 1 + int(-cls.output_mean * math.log(max(rng.random(), 1e-12)))
+    return (max(1, min(prompt, _MAX_PROMPT)),
+            max(1, min(output, _MAX_OUTPUT)))
+
+
+def _attach_sessions(rng: random.Random, n: int,
+                     follow_prob: float) -> List[Optional[int]]:
+    """With prob ``follow_prob`` a request continues a live session."""
+    sessions: List[Optional[int]] = []
+    live: List[int] = []
+    next_sid = 0
+    for _ in range(n):
+        if live and rng.random() < follow_prob:
+            sessions.append(rng.choice(live))
+        else:
+            sessions.append(next_sid)
+            live.append(next_sid)
+            if len(live) > 64:          # bounded working set of sessions
+                live.pop(0)
+            next_sid += 1
+    return sessions
+
+
+def _finish(arrivals: List[float], seed: int,
+            mix: Sequence[RequestClass],
+            session_follow: float) -> List[WorkloadRequest]:
+    rng = random.Random(f"{seed}:lengths")
+    sessions = _attach_sessions(random.Random(f"{seed}:sessions"),
+                                len(arrivals), session_follow)
+    out = []
+    for i, t in enumerate(sorted(arrivals)):
+        p, o = _sample_lengths(rng, mix)
+        out.append(WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
+                                   output_tokens=o, session=sessions[i]))
+    return out
+
+
+# --------------------------------------------------------------------- #
+def poisson_trace(rate: float, num_requests: int, seed: int = 0,
+                  mix: Sequence[RequestClass] = DEFAULT_MIX,
+                  session_follow: float = 0.3) -> List[WorkloadRequest]:
+    rng = random.Random(f"{seed}:poisson")
+    t, arrivals = 0.0, []
+    for _ in range(num_requests):
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+    return _finish(arrivals, seed, mix, session_follow)
+
+
+def bursty_trace(rate: float, num_requests: int, seed: int = 0,
+                 burst_factor: float = 6.0, on_fraction: float = 0.1,
+                 period: float = 0.0,
+                 mix: Sequence[RequestClass] = DEFAULT_MIX,
+                 session_follow: float = 0.3) -> List[WorkloadRequest]:
+    """2-state MMPP with the same long-run rate as ``poisson_trace``.
+
+    ON state: ``burst_factor * rate``; OFF state: the remainder so the
+    time-average stays ``rate`` — which requires the ON state to carry
+    less than the whole budget: ``burst_factor * on_fraction < 1``.
+    Mean cycle length defaults to the time of ~20 requests.
+    """
+    assert burst_factor * on_fraction < 1.0, \
+        "burst_factor * on_fraction must be < 1 to preserve the " \
+        "long-run rate (the OFF-state rate would go negative)"
+    rng = random.Random(f"{seed}:bursty")
+    period = period or 20.0 / rate
+    on_rate = burst_factor * rate
+    off_rate = rate * (1.0 - burst_factor * on_fraction) \
+        / (1.0 - on_fraction)
+    t, arrivals = 0.0, []
+    on = True
+    state_end = rng.expovariate(1.0 / (period * on_fraction))
+    while len(arrivals) < num_requests:
+        lam = on_rate if on else off_rate
+        dt = rng.expovariate(lam)
+        if t + dt >= state_end:         # state flips before next arrival
+            t = state_end
+            on = not on
+            mean_len = period * (on_fraction if on else 1 - on_fraction)
+            state_end = t + rng.expovariate(1.0 / mean_len)
+            continue
+        t += dt
+        arrivals.append(t)
+    return _finish(arrivals, seed, mix, session_follow)
+
+
+def diurnal_trace(rate: float, num_requests: int, seed: int = 0,
+                  period: float = 0.0, amplitude: float = 0.8,
+                  mix: Sequence[RequestClass] = DEFAULT_MIX,
+                  session_follow: float = 0.3) -> List[WorkloadRequest]:
+    """Rate ``rate * (1 + amplitude*sin(2 pi t / period))`` by thinning."""
+    assert 0.0 <= amplitude < 1.0
+    rng = random.Random(f"{seed}:diurnal")
+    period = period or 50.0 / rate      # a few "days" per trace
+    peak = rate * (1.0 + amplitude)
+    t, arrivals = 0.0, []
+    while len(arrivals) < num_requests:
+        t += rng.expovariate(peak)
+        lam = rate * (1.0 + amplitude * math.sin(2 * math.pi * t / period))
+        if rng.random() < lam / peak:
+            arrivals.append(t)
+    return _finish(arrivals, seed, mix, session_follow)
+
+
+TRACE_KINDS = {
+    "poisson": poisson_trace,
+    "bursty": bursty_trace,
+    "diurnal": diurnal_trace,
+}
+
+
+def make_trace(kind: str, rate: float, num_requests: int, seed: int = 0,
+               **kw) -> List[WorkloadRequest]:
+    if rate <= 0.0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    try:
+        gen = TRACE_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown trace kind {kind!r}; "
+                         f"pick from {sorted(TRACE_KINDS)}") from None
+    return gen(rate, num_requests, seed, **kw)
+
+
+# --------------------------------------------------------------------- #
+def trace_stats(trace: Sequence[WorkloadRequest]) -> Dict[str, float]:
+    """Summary used by tests and benchmark headers."""
+    if not trace:
+        return {"n": 0}
+    gaps = [b.arrival - a.arrival for a, b in zip(trace, trace[1:])]
+    mean_gap = sum(gaps) / max(len(gaps), 1)
+    var = sum((g - mean_gap) ** 2 for g in gaps) / max(len(gaps) - 1, 1)
+    return {
+        "n": len(trace),
+        "duration": trace[-1].arrival - trace[0].arrival,
+        "rate": (len(trace) - 1) / max(trace[-1].arrival
+                                       - trace[0].arrival, 1e-12),
+        "cv_interarrival": math.sqrt(var) / max(mean_gap, 1e-12),
+        "mean_prompt": sum(r.prompt_tokens for r in trace) / len(trace),
+        "mean_output": sum(r.output_tokens for r in trace) / len(trace),
+        "sessions": len({r.session for r in trace}),
+    }

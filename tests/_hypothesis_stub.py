@@ -1,0 +1,96 @@
+"""Deterministic fallback for ``hypothesis`` (tier-1 must collect without it).
+
+Test modules guard their import like::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+
+With hypothesis installed (CI installs requirements-dev.txt) the real
+library runs; without it, ``given`` degrades to a fixed sweep of
+deterministic examples drawn from the declared strategies — far weaker
+than real property testing, but the invariants still get exercised and
+the suite collects and passes either way.  Shrinking, example databases
+and assume() are intentionally out of scope.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List
+
+# How many deterministic examples each @given test runs without
+# hypothesis.  Kept small: the real sweep happens in CI.
+FALLBACK_EXAMPLES = 4
+
+
+class _Strategy:
+    """A sampleable value source; ``draw`` must be deterministic in rng."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 edge_cases: List[Any]):
+        self._draw = draw
+        self.edge_cases = edge_cases
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Subset of ``hypothesis.strategies`` used by this repo's tests."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         [min_value, max_value])
+
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        vals = list(values)
+        return _Strategy(lambda rng: rng.choice(vals), [vals[0], vals[-1]])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5, [False, True])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         [min_value, max_value])
+
+
+def given(**strats: _Strategy):
+    """Run the test on edge cases + seeded-random draws (no shrinking)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # Example 0 pins every strategy to its first edge case,
+            # example 1 to its last; the rest are seeded-random draws.
+            names = sorted(strats)
+            for ex in range(FALLBACK_EXAMPLES):
+                rng = random.Random(f"{fn.__name__}:{ex}")
+                if ex == 0:
+                    drawn = {k: strats[k].edge_cases[0] for k in names}
+                elif ex == 1:
+                    drawn = {k: strats[k].edge_cases[-1] for k in names}
+                else:
+                    drawn = {k: strats[k].draw(rng) for k in names}
+                fn(*args, **kwargs, **drawn)
+        # Hide the drawn parameters from pytest so remaining arguments
+        # (fixtures) are still collected normally — mirrors hypothesis.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def settings(*_a, **_kw):
+    """Accepts and ignores all hypothesis settings."""
+    def deco(fn):
+        return fn
+    return deco

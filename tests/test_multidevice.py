@@ -1,6 +1,7 @@
 """Multi-device tests run in subprocesses so they can set
 --xla_force_host_platform_device_count without polluting this process
 (conftest deliberately leaves the flag unset)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -14,11 +15,16 @@ def _run(code: str, devices: int = 4) -> str:
         f"os.environ['XLA_FLAGS'] = " \
         f"'--xla_force_host_platform_device_count={devices}'\n" \
         + textwrap.dedent(code)
+    # JAX_PLATFORMS must survive the env strip: without it jax probes
+    # non-CPU platform plugins on first backend init, which blocks for
+    # ~8 minutes per subprocess in offline containers.
     r = subprocess.run([sys.executable, "-c", prog],
                        capture_output=True, text=True,
                        env={"PYTHONPATH": str(REPO / "src"),
                             "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root",
+                            "JAX_PLATFORMS":
+                                os.environ.get("JAX_PLATFORMS", "cpu")},
                        timeout=600)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     return r.stdout

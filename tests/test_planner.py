@@ -2,7 +2,11 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # collect without hypothesis (tier-1 guard)
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import bnb, planner
 from repro.core.costmodel import (GPU_A100, GPU_H100, GPU_L40S, TPU_V5E,
@@ -178,6 +182,58 @@ def test_tpu_pair_heterogeneity_is_exploited():
 
 
 # --------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 24),
+       policy=st.sampled_from(["latency", "throughput"]),
+       pin_frac=st.sampled_from([0.0, 0.25]))
+def test_property_plan_invariants(seed, n, policy, pin_frac):
+    """Random DAG -> core plan invariants, any policy:
+
+      1. every kernel is placed exactly once (labels AND stages),
+      2. stages are MAXIMAL topological same-device runs — consecutive
+         stages differ in device and stage node ranges are contiguous,
+      3. send/recv bytes balance: every byte sent across a cut edge is
+         received exactly once, and both equal the plan's cut_bytes.
+    """
+    g = random_dag(n, seed=seed, pin_frac=pin_frac)
+    p = planner.plan(g, DEVS2, policy=policy, cache=False,
+                     anneal_iters=300)
+    # (1) exactly-once placement
+    assert len(p.labels) == n
+    assert set(p.labels) <= {0, 1}
+    covered = sorted(k for s in p.stages for k in s.node_ids)
+    assert covered == list(range(n))
+    # (2) maximal topological same-device runs
+    for s in p.stages:
+        assert all(p.labels[k] == s.device for k in s.node_ids)
+        assert list(s.node_ids) == list(range(min(s.node_ids),
+                                               max(s.node_ids) + 1))
+    for a, b in zip(p.stages, p.stages[1:]):
+        assert a.device != b.device, "adjacent same-device stages " \
+            "violate maximality"
+        assert max(a.node_ids) < min(b.node_ids)
+    # (3) cut-edge byte conservation
+    total_send = sum(s.send_bytes for s in p.stages)
+    total_recv = sum(s.recv_bytes for s in p.stages)
+    cut = sum(b for (i, j), b in g.edges.items()
+              if p.labels[i] != p.labels[j])
+    assert total_send == pytest.approx(total_recv)
+    assert total_send == pytest.approx(cut)
+    assert p.cut_bytes == pytest.approx(cut)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
+def test_property_mincut_no_worse_than_single_device(seed, n):
+    """The latency solver may always place everything on one device, so
+    its objective can never exceed the best single-device time."""
+    from repro.core.costmodel import graph_time_on
+    g = random_dag(n, seed=seed)
+    p = planner.plan(g, DEVS2, policy="latency", cache=False)
+    best_single = min(graph_time_on(g, d) for d in DEVS2)
+    assert p.objective <= best_single * (1 + 1e-9)
+
+
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 10_000), n=st.integers(4, 16))
 def test_property_placement_valid_and_bounded(seed, n):

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # collect without hypothesis (tier-1 guard)
+    from _hypothesis_stub import given, settings, strategies as st
 
 import repro.configs as configs
 from repro.checkpoint.manager import CheckpointManager

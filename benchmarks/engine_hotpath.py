@@ -1,0 +1,322 @@
+"""Hot-path benchmark: decode throughput + stage-dispatch overhead.
+
+Measures the two layers the fast-path overhaul rebuilt:
+
+  1. **Decode loop** — tokens/s of the sync-free continuous-batching
+     engine (device-resident state, fused sampling, host sync every K
+     steps, batched prefill) against a frozen copy of the pre-overhaul
+     engine (batch-1 prefills, per-token ``np.asarray`` + Python slot
+     loop).  Target: >= 2x decode tokens/s on CPU.
+  2. **Executor dispatch** — per-call latency and dispatch counts of the
+     indexed/fused dispatch program against the legacy per-stage dict
+     walk, plus PipelinedRunner dispatch totals.
+
+Writes ``BENCH_hotpath.json`` so later PRs have a perf trajectory.
+Absolute tokens/s are machine-dependent, so the regression gate
+(``--check``) compares the *speedup ratios* (fast vs reference on the
+same machine) against the committed baseline and fails when a ratio
+drops below 80% of its baseline value.
+
+  PYTHONPATH=src python benchmarks/engine_hotpath.py --quick \
+      --check benchmarks/BENCH_hotpath_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.core import analyzer, planner
+from repro.core.costmodel import GPU_A100, GPU_L40S
+from repro.core.executor import build_executable
+from repro.core.pipeline import PipelinedRunner
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+# ===================================================================== #
+# Frozen pre-overhaul engine (the "before" in before/after): batch-1
+# prefill, per-token host sync + Python slot loop.  Kept verbatim so the
+# comparison stays honest as the live engine evolves.
+# ===================================================================== #
+class ReferenceEngine:
+    def __init__(self, cfg, params, *, slots=4, max_len=256,
+                 eos_id=None, temperature=0.0, seed=0):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.eos_id, self.temperature = eos_id, temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.completed = 0
+        self.decode_steps = 0
+        self.cache = M.init_cache(cfg, slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)
+        self.budget = np.zeros(slots, np.int32)
+        self.last_tok = np.zeros(slots, np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, cfg, t, c, pos))
+        self._prefill1 = jax.jit(
+            lambda p, c, t: M.prefill(p, cfg, t, c))
+
+    def _write_slot(self, slot, cache1):
+        def upd(full, one):
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1)
+        self.cache = jax.tree_util.tree_map(upd, self.cache, cache1)
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature, axis=-1))
+
+    def admit(self, req, now):
+        try:
+            slot = self.active.index(None)
+        except ValueError:
+            return False
+        S = len(req.prompt)
+        cache1 = M.init_cache(self.cfg, 1, self.max_len)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self._prefill1(self.params, cache1, toks)
+        self._write_slot(slot, cache1)
+        tok = self._sample(logits)[0]
+        req.ttft = now
+        req.output.append(int(tok))
+        self.active[slot] = req
+        self.pos[slot] = S
+        self.budget[slot] = req.max_new_tokens - 1
+        self.last_tok[slot] = int(tok)
+        return True
+
+    def step(self, now):
+        if not any(r is not None for r in self.active):
+            return
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          pos)
+        nxt = self._sample(logits)
+        self.decode_steps += 1
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            req.output.append(tok)
+            self.budget[s] -= 1
+            done = (self.budget[s] <= 0
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or self.pos[s] >= self.max_len - 1)
+            if done:
+                req.finished = now
+                self.completed += 1
+                self.active[s] = None
+            else:
+                self.last_tok[s] = tok
+
+    def run(self, requests):
+        t0 = time.perf_counter()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        while pending or any(r is not None for r in self.active):
+            now = time.perf_counter() - t0
+            while pending and pending[0].arrival <= now:
+                if not self.admit(pending[0], now):
+                    break
+                pending.pop(0)
+            self.step(time.perf_counter() - t0)
+
+
+# ===================================================================== #
+def _make_requests(cfg, n, prompt_len, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=prompt_len).astype(np.int32),
+                    max_new_tokens=max_new, arrival=0.0)
+            for i in range(n)]
+
+
+def bench_decode(quick: bool) -> Dict[str, Any]:
+    # Deliberately tiny model: the quantity under test is hot-path
+    # overhead (dispatch, host syncs, Python bookkeeping), which on a
+    # real accelerator is what caps utilization; a large model would
+    # bury it under matmul time and measure the CPU's GEMM throughput
+    # instead.
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3_1_7b"), dtype="float32",
+        num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+        head_dim=16, d_ff=64, vocab_size=128)
+    params = M.init_params(cfg)
+    slots, max_len, prompt_len = 4, 96, 8
+    n_req = 8 if quick else 16
+    max_new = 32 if quick else 48
+    repeats = 3                      # median filters scheduler noise
+
+    def timed(make_engine):
+        eng = make_engine()
+        # warm the per-instance jit caches with an identical-shape run
+        eng.run(_make_requests(cfg, slots, prompt_len, 4, seed=7))
+        tps = []
+        for rep in range(repeats):
+            if hasattr(eng, "stats"):
+                # report counters for ONE measured run, not cumulative
+                eng.stats = type(eng.stats)()
+            reqs = _make_requests(cfg, n_req, prompt_len, max_new)
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            wall = time.perf_counter() - t0
+            decode_tokens = sum(len(r.output) for r in reqs) - len(reqs)
+            tps.append(decode_tokens / wall)
+        return float(np.median(tps)), reqs, eng
+
+    ref_tps, ref_reqs, _ = timed(
+        lambda: ReferenceEngine(cfg, params, slots=slots,
+                                max_len=max_len))
+    fast_tps, fast_reqs, fast_eng = timed(
+        lambda: ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                              sync_every=8))
+    match = float(np.mean([a.output == b.output for a, b in
+                           zip(ref_reqs, fast_reqs)]))
+    return {
+        "ref_tokens_per_s": ref_tps,
+        "fast_tokens_per_s": fast_tps,
+        "speedup": fast_tps / ref_tps,
+        "output_match_fraction": match,
+        "host_syncs": fast_eng.stats.host_syncs,
+        "decode_steps": fast_eng.stats.decode_steps,
+        "prefill_batches": fast_eng.stats.prefill_batches,
+        "requests": n_req, "max_new": max_new, "slots": slots,
+    }
+
+
+def bench_executor(quick: bool) -> Dict[str, Any]:
+    def fn(x, params):
+        for w1, w2 in params:
+            x = jax.nn.gelu(x @ w1) @ w2
+        return jnp.tanh(x)
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 13)
+    params = [(jax.random.normal(ks[2 * i], (64, 128)) * 0.1,
+               jax.random.normal(ks[2 * i + 1], (128, 64)) * 0.1)
+              for i in range(6)]
+    x = jax.random.normal(ks[12], (8, 64))
+    traced = analyzer.analyze(fn, x, params)
+    plan = planner.plan(traced.graph, [GPU_A100, GPU_L40S],
+                        policy="throughput", cache=False)
+    exe = build_executable(traced, plan)
+
+    iters = 50 if quick else 200
+    jax.block_until_ready(exe(x, params))            # compile fast path
+    jax.block_until_ready(exe.call_reference(x, params))   # + ref path
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = exe(x, params)
+    jax.block_until_ready(out)
+    fast_s = (time.perf_counter() - t0) / iters
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = exe.call_reference(x, params)
+    jax.block_until_ready(out)
+    ref_s = (time.perf_counter() - t0) / iters
+
+    runner = PipelinedRunner(exe, max_inflight=4)
+    n_pipe = 8
+    _, pstats = runner.run([((x, params), {}) for _ in range(n_pipe)])
+    return {
+        "plan_stages": len(exe.stages),
+        "dispatch_units": exe.num_units,
+        "ref_ms_per_call": ref_s * 1e3,
+        "fast_ms_per_call": fast_s * 1e3,
+        "call_speedup": ref_s / fast_s,
+        "pipeline_dispatches_per_request":
+            pstats.stage_dispatches / n_pipe,
+        "pipeline_dispatch_overhead_s": pstats.dispatch_overhead(),
+    }
+
+
+# ===================================================================== #
+def check_regression(result: Dict[str, Any], baseline_path: str) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    checks = [
+        ("decode.speedup", result["decode"]["speedup"],
+         base["decode"]["speedup"]),
+        ("executor.call_speedup", result["executor"]["call_speedup"],
+         base["executor"]["call_speedup"]),
+    ]
+    for name, cur, ref in checks:
+        if cur < 0.8 * ref:
+            failures.append(f"{name}: {cur:.2f} < 80% of baseline "
+                            f"{ref:.2f}")
+    if failures:
+        print("PERF REGRESSION:\n  " + "\n  ".join(failures))
+        return 1
+    print("perf check ok: " + ", ".join(
+        f"{n}={c:.2f} (baseline {r:.2f})" for n, c, r in checks))
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload (CI perf-smoke)")
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="fail if speedups regress >20%% vs baseline")
+    args = ap.parse_args()
+
+    print("== decode hot loop ==")
+    decode = bench_decode(args.quick)
+    for k, v in decode.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else
+              f"  {k}: {v}")
+    print("== executor dispatch ==")
+    executor = bench_executor(args.quick)
+    for k, v in executor.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else
+              f"  {k}: {v}")
+
+    result = {
+        "meta": {
+            "quick": args.quick,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+        },
+        "decode": decode,
+        "executor": executor,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.check:
+        rc = check_regression(result, args.check)
+        if rc != 0:
+            # shared CI runners are noisy; re-measure once before
+            # declaring a regression
+            print("re-measuring once before failing ...")
+            result["decode"] = bench_decode(args.quick)
+            result["executor"] = bench_executor(args.quick)
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=2)
+            rc = check_regression(result, args.check)
+        return rc
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

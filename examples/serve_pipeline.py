@@ -2,10 +2,17 @@
 
   PYTHONPATH=src python examples/serve_pipeline.py
 
-Continuous-batching engine serving a small model with batched requests;
-the decode step runs DISAGGREGATED across a heterogeneous pair via
-Tessera, and the online monitor switches between latency- and
-throughput-oriented plans as queueing pressure changes.
+A Poisson open-loop trace (serving/workload.py) drives the REAL
+continuous-batching engine; the decode step runs DISAGGREGATED across a
+heterogeneous pair via Tessera, and the online monitor switches between
+latency- and throughput-oriented plans as queueing pressure changes.
+
+The cost model's predictions for the same plan are printed next to the
+engine's wall-clock SLO stats: modeled TPOT is the decode plan's
+pipelined bottleneck, modeled TTFT the serial prefill time on the
+fastest device.  (Modeled numbers are for the TPU pair the plan was
+solved for; wall clock is whatever host runs this script — the point is
+the side-by-side harness, which later PRs tighten.)
 """
 import dataclasses
 import time
@@ -16,11 +23,12 @@ import numpy as np
 
 import repro.configs as configs
 from repro.core import analyzer, planner
-from repro.core.costmodel import TPU_V5E, TPU_V5P
+from repro.core.costmodel import TPU_V5E, TPU_V5P, graph_time_on
 from repro.core.executor import build_executable
 from repro.core.monitor import MonitorConfig, OnlineMonitor
 from repro.models import model as M
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import ServingEngine, requests_from_trace
+from repro.serving.workload import poisson_trace, trace_stats
 
 SLOTS, MAX_LEN = 4, 48
 cfg = dataclasses.replace(configs.get_smoke("gpt_oss_20b"),
@@ -53,22 +61,39 @@ monitor = OnlineMonitor(MonitorConfig(window=0.5, beta=1.5))
 def decode_fn(p, c, t, q):
     return executables[monitor.policy](p, c, t, q)
 
-# --- workload: a burst of requests ------------------------------------ #
-rng = np.random.default_rng(0)
-reqs = [Request(rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=6)
-                .astype(np.int32),
-                max_new_tokens=5,
-                arrival=0.02 * i + (0.5 if i > 8 else 0.0))
-        for i in range(12)]
+# --- workload: an open-loop Poisson trace ----------------------------- #
+PROMPT_CAP, NEW_CAP = 8, 6
+trace = poisson_trace(rate=40.0, num_requests=12, seed=0)
+print("trace:", {k: round(v, 3) for k, v in trace_stats(trace).items()})
+reqs = requests_from_trace(trace, cfg.vocab_size, max_prompt=PROMPT_CAP,
+                           max_new=NEW_CAP, time_scale=0.5)
 engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
-                       decode_fn=decode_fn)
+                       decode_fn=decode_fn, sync_every=4)
 t0 = time.perf_counter()
 stats = engine.run(reqs)
 for r in reqs:
     lat = r.finished - r.arrival
     monitor.record_request(r.finished, lat, lat * 0.5)
 monitor.tick(time.perf_counter() - t0 + 1.0)
-print("engine:", stats.summary())
+
+# --- modeled vs wall-clock SLOs --------------------------------------- #
+# modeled TTFT: serial prefill on the faster device (no queueing term);
+# modeled TPOT: pipelined steady-state bottleneck of the decode plan.
+prefill_toks = jax.ShapeDtypeStruct((1, PROMPT_CAP), jnp.int32)
+cache1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, MAX_LEN))
+tg_pre = analyzer.analyze(
+    lambda p, c, t: M.prefill(p, cfg, t, c, scan_layers=False),
+    jax.eval_shape(lambda: params), cache1, prefill_toks,
+    state_argnums=(1,))
+modeled_ttft = min(graph_time_on(tg_pre.graph, d) for d in devs)
+s = stats.summary()
+print("engine:", s)
+print(f"{'':14}{'modeled':>12}{'wall-clock':>12}")
+for name, model_v, wall_v in (
+        ("TTFT", modeled_ttft, s["mean_ttft"]),
+        ("TPOT", plans[monitor.policy].bottleneck, s["mean_tpot"])):
+    ratio = wall_v / max(model_v, 1e-12)
+    print(f"  {name:<12}{model_v * 1e3:>10.3f}ms{wall_v * 1e3:>10.3f}ms"
+          f"   (wall/model {ratio:,.0f}x)")
 print(f"monitor: policy={monitor.policy} switches={monitor.switches}")
 print("sample output tokens:", reqs[0].output)

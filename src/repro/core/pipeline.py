@@ -6,21 +6,28 @@ concurrently on separate CUDA streams with *priority-aware* scheduling
 phases).  TPU/XLA exposes neither user streams nor priorities, so the
 TPU-idiomatic equivalent is implemented at the host level:
 
-  * JAX async dispatch makes every stage call non-blocking; issuing stages
-    of *different* requests back-to-back overlaps one request's transfers
-    with another's compute — the same effect as multi-stream pipelining.
-  * A host-side run queue dispatches the next stage of the *oldest*
+  * JAX async dispatch makes every dispatch-unit call non-blocking;
+    issuing units of *different* requests back-to-back overlaps one
+    request's transfers with another's compute — the same effect as
+    multi-stream pipelining.
+  * The runner drives the executor's **indexed dispatch program**
+    (executor.py): a flat slot environment per request and fused
+    dispatch units, so the scheduling loop does no Var hashing and
+    dispatches once per physical-device alternation, not once per plan
+    stage.
+  * A host-side run queue dispatches the next unit of the *oldest*
     incomplete request first (strict priority by arrival, the paper's
     stream-priority policy), or round-robin ("naive") for ablation.
-  * Straggler mitigation: an optional wall-clock deadline per stage; on
-    expiry the stage is re-executed on a fallback device (stages are pure
-    functions, so duplicate execution is always safe — the first result to
-    arrive wins).
+  * Straggler mitigation: an optional wall-clock deadline per unit; on
+    expiry the unit is re-executed on a fallback device (units are pure
+    functions, so duplicate execution is always safe — the first result
+    to arrive wins).
+  * Per-unit dispatch timings and transfer counts are recorded so
+    benchmarks can attribute host overhead to stages.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from concurrent.futures import ThreadPoolExecutor, TimeoutError as FTimeout
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -35,8 +42,8 @@ class RequestState:
     rid: int
     args: tuple
     kwargs: dict
-    env: Optional[dict] = None
-    next_stage: int = 0
+    slots: Optional[list] = None        # indexed env (executor fast path)
+    next_unit: int = 0
     submitted: float = 0.0
     finished: float = 0.0
     output: Any = None
@@ -50,13 +57,22 @@ class RequestState:
 class PipelineStats:
     completed: int = 0
     wall_seconds: float = 0.0
-    stage_dispatches: int = 0
+    stage_dispatches: int = 0           # fused dispatch units issued
+    transfers: int = 0                  # eager cross-device sends issued
     straggler_reexecs: int = 0
     per_request_latency: List[float] = dataclasses.field(default_factory=list)
+    # host-side dispatch time accumulated per unit index (seconds);
+    # async dispatch means this is issue overhead, not device time.
+    unit_dispatch_seconds: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def throughput(self) -> float:
         return self.completed / max(self.wall_seconds, 1e-9)
+
+    def dispatch_overhead(self) -> float:
+        """Total host seconds spent issuing work."""
+        return sum(self.unit_dispatch_seconds.values())
 
 
 class PipelinedRunner:
@@ -86,13 +102,13 @@ class PipelinedRunner:
                   for i, (a, k) in enumerate(requests)]
         pending = list(range(len(states)))      # not yet admitted
         inflight: List[int] = []
-        n_stages = len(self.exe.stages)
+        n_units = self.exe.num_units
         rr = 0                                   # round-robin cursor
 
         while pending or inflight:
             while pending and len(inflight) < self.max_inflight:
                 rid = pending.pop(0)
-                states[rid].env = self.exe.init_env(
+                states[rid].slots = self.exe.init_slots(
                     *states[rid].args, **states[rid].kwargs)
                 inflight.append(rid)
 
@@ -102,11 +118,11 @@ class PipelinedRunner:
                 rid = inflight[rr % len(inflight)]
                 rr += 1
             st = states[rid]
-            self._dispatch_stage(st, stats)
+            self._dispatch_unit(st, stats)
             stats.stage_dispatches += 1
 
-            if st.next_stage >= n_stages:
-                st.output = self.exe.collect_outputs(st.env)
+            if st.next_unit >= n_units:
+                st.output = self.exe.collect_slots(st.slots)
                 # block to get an honest completion time
                 jax.block_until_ready(st.output)
                 st.finished = time.perf_counter()
@@ -118,25 +134,31 @@ class PipelinedRunner:
         return [s.output for s in states], stats
 
     # ------------------------------------------------------------------ #
-    def _dispatch_stage(self, st: RequestState, stats: PipelineStats):
-        idx = st.next_stage
+    def _dispatch_unit(self, st: RequestState, stats: PipelineStats):
+        idx = st.next_unit
+        t0 = time.perf_counter()
         if self.straggler_deadline is None:
-            self.exe.run_stage(st.env, idx)
+            stats.transfers += self.exe.run_unit(st.slots, idx)
         else:
-            fut = self._pool.submit(self._run_blocking, st.env, idx)
+            fut = self._pool.submit(self._run_blocking, st.slots, idx)
             try:
-                fut.result(timeout=self.straggler_deadline)
+                stats.transfers += fut.result(
+                    timeout=self.straggler_deadline)
             except FTimeout:
                 # Straggler: re-execute on the fallback device.  Pure
-                # stage functions make duplicate execution safe; the
-                # rerun's results overwrite the env bindings.
+                # unit functions make duplicate execution safe; the
+                # rerun's results overwrite the slot bindings.
                 stats.straggler_reexecs += 1
-                self.exe.run_stage(st.env, idx,
-                                   device_override=self.fallback_device)
+                stats.transfers += self.exe.run_unit(
+                    st.slots, idx, device_override=self.fallback_device)
                 jax.block_until_ready(
-                    [st.env[v] for v in self.exe.stages[idx].outvars])
-        st.next_stage += 1
+                    self.exe.unit_outputs(st.slots, idx))
+        dt = time.perf_counter() - t0
+        stats.unit_dispatch_seconds[idx] = \
+            stats.unit_dispatch_seconds.get(idx, 0.0) + dt
+        st.next_unit += 1
 
-    def _run_blocking(self, env, idx):
-        self.exe.run_stage(env, idx)
-        jax.block_until_ready([env[v] for v in self.exe.stages[idx].outvars])
+    def _run_blocking(self, slots, idx) -> int:
+        n = self.exe.run_unit(slots, idx)
+        jax.block_until_ready(self.exe.unit_outputs(slots, idx))
+        return n

@@ -27,6 +27,15 @@ def main() -> None:
     ap.add_argument("--disaggregate", action="store_true")
     ap.add_argument("--policy", default="throughput",
                     choices=["throughput", "latency"])
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between host syncs (1 = legacy "
+                         "per-token accounting)")
+    ap.add_argument("--trace", default=None,
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="drive the engine from an open-loop workload "
+                         "trace instead of fixed arrivals")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="trace arrival rate (req/s)")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
@@ -55,15 +64,24 @@ def main() -> None:
         exe = build_executable(traced, plan)
         decode_fn = lambda p, c, t, q: exe(p, c, t, q)
 
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=8)
-                    .astype(np.int32),
-                    max_new_tokens=args.max_new,
-                    arrival=0.01 * i)
-            for i in range(args.requests)]
+    if args.trace:
+        from repro.serving.engine import requests_from_trace
+        from repro.serving.workload import make_trace
+        trace = make_trace(args.trace, args.rate, args.requests, seed=0)
+        reqs = requests_from_trace(
+            trace, cfg.vocab_size, max_prompt=args.max_len // 2,
+            max_new=args.max_new)
+    else:
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, size=8)
+                        .astype(np.int32),
+                        max_new_tokens=args.max_new,
+                        arrival=0.01 * i)
+                for i in range(args.requests)]
     engine = ServingEngine(cfg, params, slots=args.slots,
-                           max_len=args.max_len, decode_fn=decode_fn)
+                           max_len=args.max_len, decode_fn=decode_fn,
+                           sync_every=args.sync_every)
     stats = engine.run(reqs)
     print(stats.summary())
 

@@ -388,8 +388,16 @@ def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Params, *, patch_embeds=None, positions3=None,
             enc_embeds=None, scan_layers: bool = True,
-            q_chunk: int = 512) -> Tuple[jnp.ndarray, Params]:
-    """Process the prompt, fill caches, return last-position logits."""
+            q_chunk: int = 512,
+            last_pos: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt, fill caches, return last-position logits.
+
+    ``last_pos`` (B,) selects a per-row "last" position instead of the
+    literal final column — used by continuous-batching engines that
+    right-pad a multi-request admission batch to a common length (each
+    row's true prompt ends at its own index).
+    """
     B, Sq = tokens.shape
     x = _embed_inputs(params, cfg, tokens, patch_embeds)
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
@@ -487,8 +495,14 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     else:
         raise ValueError(cfg.family)
 
-    x = L.rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    return L.unembed(params["embed"], x, cfg)[:, 0], new_cache
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32)[:, None, None]
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    xl = L.rms_norm(params["final_norm"], xl, cfg.norm_eps)
+    return L.unembed(params["embed"], xl, cfg)[:, 0], new_cache
 
 
 def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,

@@ -1,22 +1,38 @@
-"""Serving engine: continuous batching over slot-based KV caches.
+"""Serving engine: sync-free continuous batching over slot-based KV caches.
 
 vLLM-shaped control plane on a JAX data plane:
   * fixed ``slots`` decode batch; idle slots are masked, arriving
     requests are admitted into free slots (continuous batching),
-  * prefill runs per-request (batch 1) and its cache lines are written
-    into the slot's row of the batched cache,
+  * admissions are **batched**: all due arrivals that fit free slots go
+    through ONE multi-request prefill — right-padded to a common length
+    for attention families (exact under causal masking + per-row
+    ``last_pos`` logit selection), grouped by exact prompt length for
+    recurrent families (padding would pollute SSM state),
+  * the decode hot loop is **sync-free**: ``last_tok``/``pos``/``budget``
+    and the active mask live on device, sampling and termination logic
+    are folded into the jitted decode step, and sampled tokens/done
+    flags accumulate in device buffers that are fetched to the host only
+    every ``sync_every`` steps — no per-token host round trip,
   * greedy / temperature sampling, per-slot positions, EOS/max-token
-    termination, SLO accounting (TTFT / TPOT / normalized latency),
+    termination, SLO accounting (TTFT / TPOT / normalized latency).
+    TTFT is stamped only after the prefill logits are materialized
+    (``block_until_ready``) — dispatch alone is not time-to-first-token,
   * optional Tessera integration: the decode step can be executed by a
     disaggregated StagedExecutable, with the OnlineMonitor switching
     between latency- and throughput-oriented plans (examples/
     serve_pipeline.py wires this up end to end).
+
+Accounting note: completion times are observed at sync boundaries, so a
+request's ``finished`` stamp can be up to ``sync_every - 1`` decode steps
+late.  That is the deliberate trade of the sync-free loop; run with
+``sync_every=1`` to recover per-token accounting (and per-token host
+syncs).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +40,13 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+
+# Families whose prefill is exact under right-padding (causal attention
+# never reads positions past the query).  Recurrent state (ssm/hybrid)
+# integrates every input token, so padded rows would corrupt it.  (vlm
+# is deliberately absent: the engine does not serve it, and patch-embed
+# placement under padding is unvalidated.)
+_PAD_SAFE_FAMILIES = ("dense", "moe")
 
 
 @dataclasses.dataclass
@@ -42,7 +65,10 @@ class Request:
 class EngineStats:
     completed: int = 0
     decode_steps: int = 0
+    host_syncs: int = 0
+    prefill_batches: int = 0
     ttft: List[float] = dataclasses.field(default_factory=list)
+    tpot: List[float] = dataclasses.field(default_factory=list)
     latency_per_token: List[float] = dataclasses.field(
         default_factory=list)
 
@@ -50,7 +76,10 @@ class EngineStats:
         return {
             "completed": self.completed,
             "decode_steps": self.decode_steps,
+            "host_syncs": self.host_syncs,
+            "prefill_batches": self.prefill_batches,
             "mean_ttft": float(np.mean(self.ttft)) if self.ttft else 0.0,
+            "mean_tpot": float(np.mean(self.tpot)) if self.tpot else 0.0,
             "mean_norm_latency": float(np.mean(self.latency_per_token))
             if self.latency_per_token else 0.0,
         }
@@ -61,106 +90,350 @@ class ServingEngine:
                  max_len: int = 256, eos_id: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0,
                  decode_fn: Optional[Callable] = None,
-                 prefill_fn: Optional[Callable] = None):
+                 prefill_fn: Optional[Callable] = None,
+                 sync_every: int = 8):
         assert cfg.family in ("dense", "moe", "ssm", "hybrid"), \
             "engine serves decoder-only families"
+        assert sync_every >= 1
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.temperature = temperature
+        self.sync_every = sync_every
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
 
         self.cache = M.init_cache(cfg, slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
-        self.pos = np.zeros(slots, np.int32)          # next position
-        self.budget = np.zeros(slots, np.int32)       # tokens remaining
-        self.last_tok = np.zeros(slots, np.int32)
+        # Decode state is DEVICE-resident; the host only sees it at sync
+        # boundaries.
+        self.pos = jnp.zeros(slots, jnp.int32)        # next position
+        self.budget = jnp.zeros(slots, jnp.int32)     # tokens remaining
+        self.last_tok = jnp.zeros(slots, jnp.int32)
+        self.active_mask = jnp.zeros(slots, bool)
+        self._cols: List[jnp.ndarray] = []    # (2, slots) packed per step
+        # upper bound on decode steps any live slot can still take
+        # (recomputed whenever the host view is fresh)
+        self._max_remaining = sync_every
+        self._clock: Optional[Callable[[], float]] = None
 
-        self._decode = decode_fn or jax.jit(
-            lambda p, c, t, pos: M.decode_step(p, cfg, t, c, pos))
-        self._prefill1 = prefill_fn or jax.jit(
-            lambda p, c, t: M.prefill(p, cfg, t, c))
+        eos = -1 if eos_id is None else int(eos_id)
+        temp = float(temperature)
+        greedy = temp <= 0.0
+
+        def _sample(logits, key):
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temp, axis=-1)
+            return tok.astype(jnp.int32), key
+
+        def _post(logits, last_tok, pos, budget, active, key):
+            """Sampling + termination, fused with the decode dispatch.
+
+            ``packed`` is one (2, slots) int32 array — [emitted token or
+            -1; done flag] — so each step leaves exactly one buffer for
+            the sync to fetch (no eager stacking on the hot path).
+            """
+            tok, key = _sample(logits, key)
+            new_pos = jnp.where(active, pos + 1, pos)
+            new_budget = jnp.where(active, budget - 1, budget)
+            done = active & ((new_budget <= 0) | (tok == eos)
+                             | (new_pos >= max_len - 1))
+            new_active = active & ~done
+            new_last = jnp.where(new_active, tok, last_tok)
+            emit = jnp.where(active, tok, -1)     # -1 = idle slot
+            packed = jnp.stack([emit, done.astype(jnp.int32)])
+            return new_last, new_pos, new_budget, new_active, packed, key
+
+        self._post = jax.jit(_post)
+        self._decode_custom = decode_fn
+        if decode_fn is None:
+            # params are engine-lifetime constants: close over them so
+            # the hot loop does not re-flatten / re-validate the param
+            # pytree on every dispatch.
+            def _fused(c, last_tok, pos, budget, active, key):
+                logits, c = M.decode_step(params, cfg, last_tok[:, None],
+                                          c, pos)
+                return (c,) + _post(logits, last_tok, pos, budget,
+                                    active, key)
+            self._step_fused = jax.jit(_fused)
+        self._prefill_custom = prefill_fn
+        if prefill_fn is None:
+            self._prefill = jax.jit(
+                lambda c, t, lp: M.prefill(params, cfg, t, c,
+                                           last_pos=lp))
 
     # ------------------------------------------------------------------ #
-    def _write_slot(self, slot: int, cache1: Any) -> None:
-        """Copy a batch-1 cache into row ``slot`` of the engine cache."""
-        def upd(full, one):
-            # full: (L, slots, ...); one: (L, 1, ...)
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1)
-        self.cache = jax.tree_util.tree_map(upd, self.cache, cache1)
+    def _now(self, now: Optional[float]) -> float:
+        if self._clock is not None:
+            return self._clock()
+        return now if now is not None else 0.0
 
-    def admit(self, req: Request, now: float) -> bool:
-        try:
-            slot = self.active.index(None)
-        except ValueError:
-            return False
-        S = len(req.prompt)
-        assert S < self.max_len, "prompt exceeds engine max_len"
-        cache1 = M.init_cache(self.cfg, 1, self.max_len)
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, cache1 = self._prefill1(self.params, cache1, toks)
-        self._write_slot(slot, cache1)
-        tok = self._sample(logits)[0]
-        req.ttft = now
-        req.output.append(int(tok))
-        self.active[slot] = req
-        self.pos[slot] = S
-        self.budget[slot] = req.max_new_tokens - 1
-        self.last_tok[slot] = int(tok)
-        return True
+    def _any_active(self) -> bool:
+        return any(r is not None for r in self.active)
 
-    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+    def _write_slots(self, slots_: List[int], batch_cache: Any,
+                     rows: int) -> None:
+        """Scatter rows 0..rows of a prefill cache into engine slots —
+        one scatter per cache leaf for the whole admission group."""
+        idx = jnp.asarray(slots_, jnp.int32)
+
+        def upd(full, grp):
+            # full: (L, slots, ...); grp: (L, G_padded, ...)
+            return full.at[:, idx].set(
+                grp[:, :rows].astype(full.dtype))
+        self.cache = jax.tree_util.tree_map(upd, self.cache, batch_cache)
+
+    def _sample_host(self, logits: jnp.ndarray) -> np.ndarray:
         if self.temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1))
         self.key, sub = jax.random.split(self.key)
         return np.asarray(jax.random.categorical(
             sub, logits / self.temperature, axis=-1))
 
+    # ------------------------------------------------------------------ #
+    # Admission: batched multi-request prefill
+    # ------------------------------------------------------------------ #
+    def admit(self, req: Request, now: float) -> bool:
+        """Single-request admission (compat wrapper over admit_batch)."""
+        return self.admit_batch([req], now) == 1
+
+    def admit_batch(self, reqs: Sequence[Request], now: float) -> int:
+        """Admit up to len(free slots) requests through batched prefills.
+
+        Returns the number admitted.  Attention families take ONE padded
+        prefill for the whole batch; recurrent families are grouped by
+        exact prompt length (right-padding would pollute SSM state).
+        """
+        # settle any buffered window first: admission must see fresh
+        # slot state, and a slot re-filled mid-window would otherwise
+        # have its new tokens hidden behind the old -1 idle markers
+        self.sync(now)
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        take = list(reqs[:len(free)])
+        if not take:
+            return 0
+        for r in take:
+            assert len(r.prompt) < self.max_len, \
+                "prompt exceeds engine max_len"
+
+        if self._prefill_custom is not None:
+            # legacy injected prefill: per-request batch-1 path
+            groups = [[(free[i], r)] for i, r in enumerate(take)]
+        elif self.cfg.family in _PAD_SAFE_FAMILIES:
+            groups = [list(zip(free, take))]
+        else:
+            by_len: Dict[int, List] = {}
+            slot_iter = iter(free)
+            for r in take:
+                by_len.setdefault(len(r.prompt), []).append(
+                    (next(slot_iter), r))
+            groups = list(by_len.values())
+
+        for group in groups:
+            self._admit_group(group, now)
+        self._recompute_remaining()
+        return len(take)
+
+    def _admit_group(self, group: List, now: float) -> None:
+        slots_ = [s for s, _ in group]
+        reqs = [r for _, r in group]
+        G = len(reqs)
+        lens = [len(r.prompt) for r in reqs]
+        # Pad sequence length to a multiple of 8 and batch to the next
+        # power of two (padding rows are dummies): admission shapes are
+        # bucketed, so the prefill jit compiles O(log slots) variants
+        # instead of one per (batch, length) pair.  Length padding is
+        # ONLY sound for causal-attention families — recurrent state
+        # integrates every input token, pads included — so ssm/hybrid
+        # groups (already exact-length) keep their exact length.
+        if self.cfg.family in _PAD_SAFE_FAMILIES:
+            S = min(-(-max(lens) // 8) * 8, self.max_len - 1)
+        else:
+            S = max(lens)
+        Gp = min(1 << (G - 1).bit_length(), self.slots)
+        toks = np.zeros((Gp, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt
+        cache_g = M.init_cache(self.cfg, Gp, self.max_len)
+        if self._prefill_custom is not None:
+            logits, cache_g = self._prefill_custom(
+                self.params, cache_g,
+                jnp.asarray(toks[:G, :max(lens)], jnp.int32))
+        else:
+            last = np.zeros(Gp, np.int32)
+            last[:G] = np.asarray(lens) - 1
+            logits, cache_g = self._prefill(
+                cache_g, jnp.asarray(toks, jnp.int32),
+                jnp.asarray(last, jnp.int32))
+        self._write_slots(slots_, cache_g, G)
+        # honest TTFT: the first token exists only once logits are real
+        jax.block_until_ready(logits)
+        t_ready = self._now(now)
+        first = self._sample_host(logits)[:G]
+        self.stats.prefill_batches += 1
+
+        upd_slots = jnp.asarray(slots_, jnp.int32)
+        self.pos = self.pos.at[upd_slots].set(
+            jnp.asarray(lens, jnp.int32))
+        self.last_tok = self.last_tok.at[upd_slots].set(
+            jnp.asarray(first, jnp.int32))
+        budgets = [r.max_new_tokens - 1 for r in reqs]
+        self.budget = self.budget.at[upd_slots].set(
+            jnp.asarray(budgets, jnp.int32))
+        # a slot only becomes live if it still has budget AND the
+        # prefill token was not EOS — otherwise the device mask would
+        # keep a ghost slot decoding after the host finalized it
+        live = [b > 0 and not (self.eos_id is not None
+                               and int(t) == self.eos_id)
+                for b, t in zip(budgets, first)]
+        self.active_mask = self.active_mask.at[upd_slots].set(
+            jnp.asarray(live))
+
+        for i, (slot, req) in enumerate(group):
+            tok = int(first[i])
+            req.ttft = t_ready
+            req.output.append(tok)
+            if live[i]:
+                self.active[slot] = req
+            else:
+                # completes at prefill (budget spent or EOS sampled)
+                self._finalize(req, t_ready)
+
+    # ------------------------------------------------------------------ #
+    # Sync-free decode loop
+    # ------------------------------------------------------------------ #
     def step(self, now: float) -> None:
-        """One decode step over all active slots (idle slots masked)."""
-        if not any(r is not None for r in self.active):
+        """One decode step over all active slots (idle slots masked).
+
+        Dispatch only — sampled tokens and done flags accumulate on
+        device and reach the host every ``sync_every`` steps.
+        """
+        if not self._any_active():
             return
-        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, toks,
-                                          pos)
-        nxt = self._sample(logits)
+        if self._decode_custom is not None:
+            logits, self.cache = self._decode_custom(
+                self.params, self.cache, self.last_tok[:, None], self.pos)
+            (self.last_tok, self.pos, self.budget, self.active_mask,
+             packed, self.key) = self._post(
+                logits, self.last_tok, self.pos, self.budget,
+                self.active_mask, self.key)
+        else:
+            (self.cache, self.last_tok, self.pos, self.budget,
+             self.active_mask, packed, self.key) = self._step_fused(
+                self.cache, self.last_tok, self.pos,
+                self.budget, self.active_mask, self.key)
+        self._cols.append(packed)
         self.stats.decode_steps += 1
-        for s, req in enumerate(self.active):
+        # sync at the cadence, or as soon as every live slot must have
+        # exhausted its budget (avoids masked tail steps at drain)
+        if len(self._cols) >= min(self.sync_every, self._max_remaining):
+            self.sync(now)
+
+    def sync(self, now: float) -> None:
+        """Fetch buffered tokens/flags; settle completions on the host."""
+        if not self._cols:
+            return
+        # one stacked D2H fetch for the whole window, not one per step
+        cols = self._cols[0] if len(self._cols) == 1 else \
+            jnp.stack(self._cols, axis=2)
+        window = np.asarray(cols).reshape(2, self.slots, -1)
+        toks, dones = window[0], window[1]                     # (slots, k)
+        self._cols = []
+        self.stats.host_syncs += 1
+        now = self._now(now)
+        for s in range(self.slots):
+            req = self.active[s]
             if req is None:
                 continue
-            self.pos[s] += 1
-            tok = int(nxt[s])
-            req.output.append(tok)
-            self.budget[s] -= 1
-            done = (self.budget[s] <= 0
-                    or (self.eos_id is not None and tok == self.eos_id)
-                    or self.pos[s] >= self.max_len - 1)
-            if done:
-                req.finished = now
-                self.stats.completed += 1
-                self.stats.ttft.append(req.ttft - req.arrival)
-                per_tok = (now - req.arrival) / max(len(req.output), 1)
-                self.stats.latency_per_token.append(per_tok)
-                self.active[s] = None
-            else:
-                self.last_tok[s] = tok
+            for k in range(toks.shape[1]):
+                t = int(toks[s, k])
+                if t < 0:           # slot went idle earlier in the window
+                    break
+                req.output.append(t)
+                if dones[s, k]:
+                    self._finalize(req, now)
+                    self.active[s] = None
+                    break
+        self._recompute_remaining()
+
+    def _recompute_remaining(self) -> None:
+        rem = [r.max_new_tokens - len(r.output)
+               for r in self.active if r is not None]
+        self._max_remaining = max(rem) if rem else self.sync_every
+
+    def _finalize(self, req: Request, now: float) -> None:
+        req.finished = now
+        self.stats.completed += 1
+        self.stats.ttft.append(req.ttft - req.arrival)
+        self.stats.tpot.append(
+            (now - req.ttft) / max(len(req.output) - 1, 1))
+        self.stats.latency_per_token.append(
+            (now - req.arrival) / max(len(req.output), 1))
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request]) -> EngineStats:
         """Process a workload to completion (arrival times honored via
         a virtual clock driven by wall time)."""
         t0 = time.perf_counter()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        while pending or any(r is not None for r in self.active):
-            now = time.perf_counter() - t0
-            while pending and pending[0].arrival <= now:
-                if not self.admit(pending[0], now):
-                    break
-                pending.pop(0)
-            self.step(time.perf_counter() - t0)
+        self._clock = lambda: time.perf_counter() - t0
+        try:
+            pending = sorted(requests, key=lambda r: r.arrival)
+            while pending or self._any_active():
+                now = self._clock()
+                if pending and pending[0].arrival <= now \
+                        and None in self.active:
+                    # admit every due arrival that fits (admit_batch
+                    # settles the buffered window itself)
+                    batch = []
+                    nfree = self.active.count(None)
+                    while (pending and len(batch) < nfree
+                           and pending[0].arrival <= self._clock()):
+                        batch.append(pending.pop(0))
+                    if batch:
+                        self.admit_batch(batch, self._clock())
+                if not self._any_active():
+                    if pending:
+                        # idle until the next arrival: sleep, don't spin
+                        delay = pending[0].arrival - self._clock()
+                        if delay > 0:
+                            time.sleep(delay)
+                    continue
+                self.step(self._clock())
+            self.sync(self._clock())
+        finally:
+            self._clock = None
         return self.stats
+
+
+# --------------------------------------------------------------------- #
+def requests_from_trace(trace, vocab_size: int, *,
+                        max_prompt: Optional[int] = None,
+                        max_new: Optional[int] = None,
+                        time_scale: float = 1.0,
+                        seed: int = 0) -> List[Request]:
+    """Materialize ``serving.workload`` trace entries as engine Requests.
+
+    Workload traces carry token *counts*; this synthesizes concrete
+    prompts (uniform random ids) at those lengths, optionally clipped to
+    engine-sized ``max_prompt``/``max_new`` and with arrivals compressed
+    by ``time_scale`` (CPU smoke runs serve far fewer tok/s than the
+    modeled accelerators).
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for w in trace:
+        p = w.prompt_tokens if max_prompt is None \
+            else min(w.prompt_tokens, max_prompt)
+        n = w.output_tokens if max_new is None \
+            else min(w.output_tokens, max_new)
+        out.append(Request(
+            rid=w.rid,
+            prompt=rng.integers(0, vocab_size, size=max(1, p))
+            .astype(np.int32),
+            max_new_tokens=max(1, n),
+            arrival=w.arrival * time_scale))
+    return out

@@ -97,6 +97,41 @@ def test_pipelined_runner_across_devices():
     assert "PIPELINE_OK 5" in out
 
 
+def test_straggler_override_preserves_slot_devices():
+    """Re-running a unit on a fallback device must leave its exports
+    committed to the unit's HOME device: later same-device units read
+    those slots directly, and jit rejects mixed-device inputs."""
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import analyzer, planner
+    from repro.core.costmodel import GPU_A100, GPU_L40S
+    from repro.core.executor import StagedExecutable
+
+    def fn(x, w):
+        for _ in range(6):
+            x = jnp.tanh(x @ w)
+        return x
+    x = jnp.ones((8, 16)); w = jnp.eye(16) * 0.7
+    traced = analyzer.analyze(fn, x, w)
+    plan = planner.plan(traced.graph, [GPU_A100, GPU_L40S], cache=False)
+    devs = jax.devices()
+    exe = StagedExecutable(traced, plan, [devs[0], devs[1]])
+    assert exe.num_units > 1, exe.num_units
+    slots = exe.init_slots(x, w)
+    for i in range(exe.num_units):
+        # every unit is a straggler: rerun all on a third device
+        exe.run_unit(slots, i, device_override=devs[3])
+        for v, fs in zip(exe.unit_outputs(slots, i),
+                         [exe.program.fused[i]] * 99):
+            assert v.devices() == {fs.device}, (i, v.devices())
+    got = exe.collect_slots(slots)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jax.jit(fn)(x, w)), rtol=1e-5)
+    print("OVERRIDE_PLACEMENT_OK")
+    """)
+    assert "OVERRIDE_PLACEMENT_OK" in out
+
+
 def test_pjit_mesh_train_step_runs():
     """A sharded train step must actually execute on an 8-device host
     mesh (not just compile) — validates the sharding rules end to end."""

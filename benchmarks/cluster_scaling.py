@@ -19,6 +19,8 @@ quantity (throughput req/s, cost-eff req/$, speedup ratios) in
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 from pathlib import Path
 from typing import List, Sequence, Tuple
@@ -29,7 +31,7 @@ from common import request_graph
 from repro.core.monitor import MonitorConfig
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import JSEDRouter, RoundRobinRouter
-from repro.serving.workload import make_trace
+from repro.serving.workload import assign_slos, make_trace
 
 Row = Tuple[str, float, str]
 
@@ -37,6 +39,7 @@ ARCH = "llama3_8b"
 LAYERS = 2                      # traced layers (costs are per-layer exact)
 BASE_PROMPT, BASE_OUT = 1024, 128
 N_REQ = 400
+SLO_BASE, SLO_PER_TOK = 4.0, 0.05   # completion deadline (s)
 
 # Heterogeneity mixes: each entry is the device-pair cycle replicas are
 # drawn from.  "paper-pairs" interleaves the paper's three local pairs —
@@ -50,24 +53,28 @@ MIXES = {
 REPLICA_COUNTS = (1, 2, 4, 8)           # x2 devices each -> up to 16
 
 
-def build_cluster(mix: Sequence[Tuple[str, str]],
-                  n_replicas: int) -> TesseraCluster:
+def build_cluster(mix: Sequence[Tuple[str, str]], n_replicas: int,
+                  anneal: int = 800) -> TesseraCluster:
     groups = [list(mix[i % len(mix)]) for i in range(n_replicas)]
     g = request_graph(ARCH, prompt=BASE_PROMPT, n_out=BASE_OUT,
                       layers=LAYERS)
     return TesseraCluster(g, groups, base_prompt=BASE_PROMPT,
                           base_output=BASE_OUT,
                           monitor_cfg=MonitorConfig(window=0.050),
-                          anneal_iters=800)
+                          anneal_iters=anneal)
 
 
 def run_mix(mix_name: str, mix, trace_kind: str = "poisson",
-            load: float = 1.1) -> List[Row]:
+            load: float = 1.1, quick: bool = False) -> List[Row]:
     rows: List[Row] = []
-    for n_rep in REPLICA_COUNTS:
-        cluster = build_cluster(mix, n_rep)
+    n_req = 150 if quick else N_REQ
+    counts = REPLICA_COUNTS[:2] if quick else REPLICA_COUNTS
+    for n_rep in counts:
+        cluster = build_cluster(mix, n_rep, 300 if quick else 800)
         rate = load * cluster.capacity
-        trace = make_trace(trace_kind, rate, N_REQ, seed=17)
+        trace = assign_slos(
+            make_trace(trace_kind, rate, n_req, seed=17),
+            base=SLO_BASE, per_output_token=SLO_PER_TOK)
         res = {}
         for router in (RoundRobinRouter(), JSEDRouter()):
             r = cluster.simulate(trace, router)
@@ -75,32 +82,51 @@ def run_mix(mix_name: str, mix, trace_kind: str = "poisson",
             tag = (f"cluster.{mix_name}.{trace_kind}.r{n_rep}"
                    f".g{cluster.num_devices}.{router.name}")
             rows.append((f"{tag}.throughput", r.mean_latency * 1e6,
-                         f"{r.throughput:.2f}req/s"))
+                         f"{r.throughput:.2f}req/s"
+                         f"|good={r.goodput:.2f}"))
             rows.append((f"{tag}.cost_eff", r.p(0.95) * 1e6,
                          f"{r.cost_efficiency:.1f}req/$"))
         ratio = (res["jsed"].throughput
                  / max(res["round_robin"].throughput, 1e-12))
+        good_ratio = (res["jsed"].goodput
+                      / max(res["round_robin"].goodput, 1e-12))
         lat_ratio = (res["round_robin"].mean_latency
                      / max(res["jsed"].mean_latency, 1e-12))
         rows.append((f"cluster.{mix_name}.{trace_kind}.r{n_rep}"
                      f".jsed_over_rr", 0.0,
-                     f"thr_x{ratio:.3f}|lat_x{lat_ratio:.3f}"))
+                     f"thr_x{ratio:.3f}|good_x{good_ratio:.3f}"
+                     f"|lat_x{lat_ratio:.3f}"))
     return rows
 
 
-def cluster_scaling() -> List[Row]:
+def cluster_scaling(quick: bool = False) -> List[Row]:
     rows: List[Row] = []
     for mix_name, mix in MIXES.items():
-        rows += run_mix(mix_name, mix, "poisson")
+        rows += run_mix(mix_name, mix, "poisson", quick=quick)
     # burstiness stresses the router + monitor on the most hetero mix
-    rows += run_mix("paper-pairs", MIXES["paper-pairs"], "bursty")
+    rows += run_mix("paper-pairs", MIXES["paper-pairs"], "bursty",
+                    quick=quick)
     return rows
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep (fewer replicas/requests)")
+    ap.add_argument("--out", default=None, metavar="JSON",
+                    help="write machine-readable results")
+    args = ap.parse_args()
+    rows = cluster_scaling(args.quick)
     print("name,us_per_call,derived")
-    for name, us, derived in cluster_scaling():
+    for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"bench": "cluster_scaling", "quick": args.quick,
+                       "rows": [{"name": n, "us_per_call": us,
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=2)
+        print(f"# wrote {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -306,6 +306,43 @@ class ClusterRequest:
     scale_prompt: float = 1.0       # prefill work multiplier
     scale_output: float = 1.0       # decode work multiplier
     session: Optional[int] = None   # decode-session affinity key
+    kv_bytes: float = 0.0           # prefill->decode KV handoff size
+    slo: Optional[float] = None     # completion deadline (s of latency)
+    slo_ttft: Optional[float] = None    # first-token deadline (s)
+
+
+def _phase_scales(req: ClusterRequest, phase: str) -> Tuple[float, float]:
+    """(scale_prompt, scale_output) with the other phase zeroed out."""
+    if phase == "both":
+        return req.scale_prompt, req.scale_output
+    if phase == "prefill":
+        return req.scale_prompt, 0.0
+    if phase == "decode":
+        return 0.0, req.scale_output
+    raise ValueError(f"unknown phase {phase!r}")
+
+
+@dataclasses.dataclass
+class Interconnect:
+    """Cross-replica fabric for KV-state handoff.
+
+    ``default_bw`` models the datacenter fabric between replica groups
+    (distinct from the intra-replica ``DeviceSpec.link_bw`` the planner
+    cuts over); ``bw[(src, dst)]`` overrides individual directed pairs —
+    the "bandwidth matrix" knob for rack-locality experiments.
+    """
+    default_bw: float = 100e9       # bytes/s between replica groups
+    base_latency: float = 20e-6     # per-transfer setup cost (s)
+    bw: Dict[Tuple[int, int], float] = \
+        dataclasses.field(default_factory=dict)
+
+    def bandwidth(self, src: int, dst: int) -> float:
+        return self.bw.get((src, dst), self.default_bw)
+
+    def transfer_time(self, nbytes: float, src: int, dst: int) -> float:
+        if src == dst or nbytes <= 0.0:
+            return 0.0
+        return self.base_latency + nbytes / self.bandwidth(src, dst)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -388,13 +425,47 @@ class ReplicaModel:
             heapq.heappop(self._finish)
         return len(self._finish)
 
+    def predicted_phase_service(self, req: ClusterRequest,
+                                phase: str,
+                                policy: Optional[str] = None) -> float:
+        """Unqueued latency of one phase of ``req`` on this replica.
+
+        Phase filtering reuses each unit's decode fraction: the prefill
+        phase runs the unit at ``scale_output=0`` and the decode phase at
+        ``scale_prompt=0``, so prefill + decode == the colocated total.
+        """
+        sp, so = _phase_scales(req, phase)
+        units = self.unit_sets[policy or self.policy]
+        return sum(u.scaled(sp, so) for u in units)
+
     # -------------------------------------------------------------- #
     def submit(self, req: ClusterRequest,
-               events: Optional[List[Tuple]] = None) -> float:
-        """Schedule the request; returns its finish time."""
-        t = req.arrival
+               events: Optional[List[Tuple]] = None, *,
+               phase: str = "both",
+               not_before: float = 0.0) -> float:
+        """Schedule the request (or one phase of it); returns its finish
+        time.  ``phase`` selects which share of each stage unit runs
+        here: "both" (colocated), "prefill" (decode share zeroed) or
+        "decode" (prefill share zeroed — a decode_only admission that
+        starts from imported KV state).  ``not_before`` delays the first
+        unit (KV-transfer arrival, rate-matched admission)."""
+        return self._run_units(req, events, phase, not_before)[0]
+
+    def _run_units(self, req: ClusterRequest,
+                   events: Optional[List[Tuple]] = None,
+                   phase: str = "both",
+                   not_before: float = 0.0) -> Tuple[float, float]:
+        """Walk the request's stage units; returns ``(finish,
+        prefill_end)`` where ``prefill_end`` is when the last unit with
+        any prefill share completes (the first token's timestamp for a
+        colocated or prefill-phase submission)."""
+        sp, so = _phase_scales(req, phase)
+        t = max(req.arrival, not_before)
+        prefill_end = t
         for u in self.unit_sets[self.policy]:
-            dur = u.scaled(req.scale_prompt, req.scale_output)
+            dur = u.scaled(sp, so)
+            if dur <= 0.0:
+                continue            # unit fully belongs to the other phase
             free = self.link_free if u.kind == 0 else self.dev_free
             busy = self.link_busy if u.kind == 0 else self.dev_busy
             start = max(t, free[u.device])
@@ -405,9 +476,16 @@ class ReplicaModel:
                 events.append((self.idx, req.rid, u.kind, u.device,
                                start, end))
             t = end
+            if u.decode_frac < 1.0:
+                # the unit's prefill share finishes first; its decode
+                # share (repeated decode iterations) follows — a
+                # request's own decode work cannot precede its first
+                # token, so TTFT charges only the prefill share here
+                prefill_end = start + u.scaled(sp, 0.0)
         heapq.heappush(self._finish, t)
-        self.completed += 1
-        return t
+        if phase != "prefill":      # the decode side owns completion
+            self.completed += 1
+        return t, prefill_end
 
     def maybe_switch(self, now: float) -> bool:
         """Adopt the monitor's policy; a switch stalls all workers for
@@ -430,21 +508,38 @@ class ReplicaModel:
 class ClusterResult:
     makespan: float
     completed: int
-    latencies: List[float]              # in arrival order
-    assignments: List[int]              # replica chosen per request
+    latencies: List[float]              # served requests, arrival order
+    assignments: List[int]              # replica per request (-1 = shed)
     per_replica_completed: List[int]
     per_replica_busy: List[float]       # summed compute-busy seconds
     switches: int
     events: List[Tuple]                 # (replica, rid, kind, dev, t0, t1)
     price_rate: float = 0.0             # $/hr of all device groups
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    shed: int = 0                       # admission-control rejections
+    slo_ok: int = 0                     # served within their SLO
+    # phase-split extras (zero for colocated routing)
+    transfers: int = 0                  # cross-replica KV handoffs
+    transfer_seconds: float = 0.0       # summed KV time on the fabric
+    peak_kv_bytes: float = 0.0          # max KV resident awaiting decode
 
     @property
     def throughput(self) -> float:
         return self.completed / max(self.makespan, 1e-12)
 
     @property
+    def goodput(self) -> float:
+        """Served-within-SLO requests per second (== throughput when no
+        request carries an SLO)."""
+        return self.slo_ok / max(self.makespan, 1e-12)
+
+    @property
     def mean_latency(self) -> float:
         return sum(self.latencies) / max(len(self.latencies), 1)
+
+    @property
+    def mean_ttft(self) -> float:
+        return sum(self.ttfts) / max(len(self.ttfts), 1)
 
     def p(self, q: float) -> float:
         xs = sorted(self.latencies)
@@ -459,26 +554,45 @@ class ClusterResult:
         return self.throughput * 3600.0 / max(self.price_rate, 1e-12)
 
 
+def _meets_slo(req: ClusterRequest, lat: float, ttft: float) -> bool:
+    """Both SLO components must hold (absent components always hold)."""
+    return ((req.slo is None or lat <= req.slo)
+            and (req.slo_ttft is None or ttft <= req.slo_ttft))
+
+
 def simulate_cluster(replicas: Sequence[ReplicaModel],
                      trace: Sequence[ClusterRequest],
                      route_fn) -> ClusterResult:
     """Composed cluster simulation under ``route_fn``.
 
     ``route_fn(req, replicas, now) -> replica index`` is consulted once
-    per request at its arrival instant.  Requests must be sorted by
+    per request at its arrival instant; a negative index sheds the
+    request (admission control — it never touches a replica and counts
+    toward neither throughput nor goodput).  Requests must be sorted by
     arrival.  Deterministic: identical (trace, plans, router) produce a
     bit-identical event log and makespan.
     """
     events: List[Tuple] = []
     latencies: List[float] = []
+    ttfts: List[float] = []
     assignments: List[int] = []
     max_finish = 0.0
+    shed = slo_ok = 0
     for req in trace:
         idx = route_fn(req, replicas, req.arrival)
+        if idx is None or idx < 0:
+            assignments.append(-1)
+            shed += 1
+            continue
         rep = replicas[idx]
-        finish = rep.submit(req, events)
+        finish, first_tok = rep._run_units(req, events)
         assignments.append(idx)
-        latencies.append(finish - req.arrival)
+        lat = finish - req.arrival
+        latencies.append(lat)
+        ttft = first_tok - req.arrival
+        ttfts.append(ttft)
+        if _meets_slo(req, lat, ttft):
+            slo_ok += 1
         max_finish = max(max_finish, finish)
         if rep.monitor is not None:
             rep.monitor.record_request(
@@ -487,11 +601,148 @@ def simulate_cluster(replicas: Sequence[ReplicaModel],
     t0 = min((r.arrival for r in trace), default=0.0)
     return ClusterResult(
         makespan=max_finish - t0 if trace else 0.0,
-        completed=len(trace),
+        completed=len(latencies),
         latencies=latencies,
         assignments=assignments,
         per_replica_completed=[r.completed for r in replicas],
         per_replica_busy=[sum(r.dev_busy) for r in replicas],
         switches=sum(r.switches for r in replicas),
         events=events,
-        price_rate=sum(r.price for r in replicas))
+        price_rate=sum(r.price for r in replicas),
+        ttfts=ttfts, shed=shed, slo_ok=slo_ok)
+
+
+# --------------------------------------------------------------------- #
+# Phase-split (prefill/decode) cluster simulation
+# --------------------------------------------------------------------- #
+#
+# A request's prefill and decode phases can run on DIFFERENT replica
+# groups with an explicit KV-transfer edge between them: prefill fills
+# the KV/recurrent state on the prefill group, the state crosses the
+# inter-replica fabric (``Interconnect``), and the decode group starts a
+# decode_only session from the imported state.  The transfer is a
+# first-class DES event (kind 2) and its time lands in TTFT — the first
+# token cannot be streamed from the decode group before the state
+# arrives.  This is the paper's headline heterogeneous scenario:
+# prefill on the compute-rich device pool, decode on the cheap
+# bandwidth-rich one.
+
+#: event-log kind for a cross-replica KV transfer; the tuple is
+#: (dst_replica, rid, KV_TRANSFER, src_replica, t_start, t_end).
+KV_TRANSFER = 2
+
+
+def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
+                        trace: Sequence[ClusterRequest],
+                        route_fn,
+                        interconnect: Optional[Interconnect] = None
+                        ) -> ClusterResult:
+    """Cluster simulation where the router may split phases.
+
+    ``route_fn(req, replicas, now)`` returns either a plain replica
+    index (colocated; negative = shed) or a 3-tuple ``(prefill_idx,
+    decode_idx, admit_at)`` — ``admit_at >= now`` is the rate-matched
+    prefill admission time (see router.PDRouter).  Deterministic like
+    :func:`simulate_cluster`.
+    """
+    ic = interconnect or Interconnect()
+    events: List[Tuple] = []
+    latencies: List[float] = []
+    ttfts: List[float] = []
+    assignments: List[int] = []
+    # KV residency intervals on decode groups: (arrive, decode_finish,
+    # bytes) — peak concurrent bytes is the "no unbounded KV queue"
+    # check rate matching must keep bounded.
+    kv_resident: List[Tuple[float, float, float]] = []
+    max_finish = 0.0
+    shed = slo_ok = transfers = 0
+    transfer_seconds = 0.0
+    for req in trace:
+        decision = route_fn(req, replicas, req.arrival)
+        if not isinstance(decision, tuple):
+            if decision is None or decision < 0:
+                assignments.append(-1)
+                shed += 1
+                continue
+            p_idx = d_idx = decision
+            admit_at = req.arrival
+        else:
+            p_idx, d_idx, admit_at = decision
+            admit_at = max(admit_at, req.arrival)
+        if p_idx == d_idx:
+            rep = replicas[p_idx]
+            finish, first_tok = rep._run_units(req, events, "both",
+                                               admit_at)
+            ttft = first_tok - req.arrival
+            if rep.monitor is not None:
+                rep.monitor.record_request(
+                    finish, finish - req.arrival,
+                    rep.predicted_service(req))
+                rep.maybe_switch(req.arrival)
+        else:
+            pre, dec = replicas[p_idx], replicas[d_idx]
+            pre_fin, _ = pre._run_units(req, events, "prefill", admit_at)
+            tdur = ic.transfer_time(req.kv_bytes, p_idx, d_idx)
+            kv_at = pre_fin + tdur
+            events.append((d_idx, req.rid, KV_TRANSFER, p_idx,
+                           pre_fin, kv_at))
+            transfers += 1
+            transfer_seconds += tdur
+            finish, _ = dec._run_units(req, events, "decode", kv_at)
+            # first token streams from the decode group once the state
+            # lands there — transfer time is part of TTFT
+            ttft = kv_at - req.arrival
+            kv_resident.append((kv_at, finish, req.kv_bytes))
+            # each pool's monitor OBSERVES the queueing its own phase
+            # caused (measured from when the work became available),
+            # but split-routed replicas do NOT adopt policy flips: both
+            # stored plans optimize whole-request objectives, so
+            # flipping a pool between them mid-split degrades both
+            # phases (measured in benchmarks/pd_split.py) — a pool's
+            # plan choice is the router's role assignment.  Phase-
+            # specific plans would make adaptation meaningful here;
+            # until then the monitor's ratio history/would-be switches
+            # stay visible without perturbing the schedule.
+            if pre.monitor is not None:
+                pre.monitor.record_request(
+                    pre_fin, pre_fin - admit_at,
+                    pre.predicted_phase_service(req, "prefill"))
+            if dec.monitor is not None:
+                dec.monitor.record_request(
+                    finish, finish - kv_at,
+                    dec.predicted_phase_service(req, "decode"))
+        assignments.append(d_idx)
+        lat = finish - req.arrival
+        latencies.append(lat)
+        ttfts.append(ttft)
+        if _meets_slo(req, lat, ttft):
+            slo_ok += 1
+        max_finish = max(max_finish, finish)
+    t0 = min((r.arrival for r in trace), default=0.0)
+    return ClusterResult(
+        makespan=max_finish - t0 if trace else 0.0,
+        completed=len(latencies),
+        latencies=latencies,
+        assignments=assignments,
+        per_replica_completed=[r.completed for r in replicas],
+        per_replica_busy=[sum(r.dev_busy) for r in replicas],
+        switches=sum(r.switches for r in replicas),
+        events=events,
+        price_rate=sum(r.price for r in replicas),
+        ttfts=ttfts, shed=shed, slo_ok=slo_ok,
+        transfers=transfers, transfer_seconds=transfer_seconds,
+        peak_kv_bytes=_peak_concurrent(kv_resident))
+
+
+def _peak_concurrent(intervals: Sequence[Tuple[float, float, float]]
+                     ) -> float:
+    """Max summed weight over overlapping [t0, t1) intervals."""
+    deltas: List[Tuple[float, float]] = []
+    for t0, t1, w in intervals:
+        deltas.append((t0, w))
+        deltas.append((t1, -w))
+    peak = cur = 0.0
+    for _, dw in sorted(deltas):
+        cur += dw
+        peak = max(peak, cur)
+    return peak

@@ -12,6 +12,8 @@ Entry points (all pure):
   loss_fn(params, cfg, tokens, targets)         train loss
   prefill(params, cfg, tokens, cache)           fill caches, last logits
   decode_step(params, cfg, tokens, cache, pos)  one token, (B,) positions
+  export_kv / import_kv / kv_state_bytes        per-request state handoff
+                                                (prefill/decode split)
 """
 from __future__ import annotations
 
@@ -503,6 +505,63 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
     xl = L.rms_norm(params["final_norm"], xl, cfg.norm_eps)
     return L.unembed(params["embed"], xl, cfg)[:, 0], new_cache
+
+
+# --------------------------------------------------------------------- #
+# Per-request state handoff (prefill/decode disaggregation)
+# --------------------------------------------------------------------- #
+def export_kv(cfg: ModelConfig, cache: Params, slot: int,
+              length: Optional[int] = None) -> Params:
+    """Extract one sequence's KV / recurrent state from a batched cache.
+
+    Returns a batch-1 pytree mirroring the cache structure — the payload
+    a prefill engine ships to a decode-only engine.  Every cache leaf is
+    (L, B, ...); the batch axis is sliced at ``slot``.  For attention KV
+    the time axis is additionally trimmed to ``length`` (only the filled
+    prefix transfers — the size the cost model charges the interconnect
+    for); recurrent state (ssm / hybrid mamba) is fixed-size and ships
+    whole.  Ring-buffer (sliding-window) KV is never trimmed: slot
+    layout depends on absolute positions.
+    """
+    out: Params = {}
+    for key, val in cache.items():
+        sub = jax.tree_util.tree_map(lambda a: a[:, slot:slot + 1], val)
+        if key == "kv" and length is not None \
+                and cfg.sliding_window is None:
+            sub = {"k": sub["k"][:, :, :length],
+                   "v": sub["v"][:, :, :length]}
+        out[key] = sub
+    return out
+
+
+def import_kv(cfg: ModelConfig, cache: Params, slot: int,
+              state: Params) -> Params:
+    """Write an exported per-request state into ``slot`` of a batched
+    cache (the decode_only admission path).  Inverse of
+    :func:`export_kv`: a round trip through export/import must leave
+    decode bit-identical to never having left the original engine.
+    """
+    new = dict(cache)
+    for key, val in state.items():
+        if key == "kv":
+            T = val["k"].shape[2]
+            new["kv"] = {
+                "k": cache["kv"]["k"].at[:, slot:slot + 1, :T].set(
+                    val["k"].astype(cache["kv"]["k"].dtype)),
+                "v": cache["kv"]["v"].at[:, slot:slot + 1, :T].set(
+                    val["v"].astype(cache["kv"]["v"].dtype)),
+            }
+        else:
+            new[key] = jax.tree_util.tree_map(
+                lambda full, s: full.at[:, slot:slot + 1].set(
+                    s.astype(full.dtype)), cache[key], val)
+    return new
+
+
+def kv_state_bytes(state: Params) -> int:
+    """Wire size of an exported state (what the interconnect carries)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(state))
 
 
 def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,

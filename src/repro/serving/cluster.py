@@ -33,8 +33,10 @@ from repro.core.costmodel import CATALOG, DeviceSpec
 from repro.core.graph import KernelGraph
 from repro.core.monitor import MonitorConfig, OnlineMonitor
 from repro.core.simulator import (ClusterRequest, ClusterResult,
-                                  ReplicaModel, ReplicaUnit,
-                                  replica_units, simulate_cluster)
+                                  Interconnect, ReplicaModel, ReplicaUnit,
+                                  replica_units, simulate_cluster,
+                                  simulate_cluster_pd)
+from repro.models.config import ModelConfig
 from repro.serving.workload import WorkloadRequest
 
 POLICIES = ("latency", "throughput")
@@ -92,7 +94,9 @@ class TesseraCluster:
                  monitor_cfg: Optional[MonitorConfig] = MonitorConfig(),
                  initial_policy: str = "latency",
                  bw_override: Optional[float] = None,
-                 anneal_iters: int = 1000):
+                 anneal_iters: int = 1000,
+                 model_cfg: Optional[ModelConfig] = None,
+                 interconnect: Optional[Interconnect] = None):
         assert replica_devices, "need at least one replica group"
         assert initial_policy in policies
         self.graph = graph
@@ -100,6 +104,8 @@ class TesseraCluster:
         self.base_output = max(base_output, 1)
         self.monitor_cfg = monitor_cfg
         self.initial_policy = initial_policy
+        self.model_cfg = model_cfg
+        self.interconnect = interconnect or Interconnect()
         self.groups: List[ReplicaGroup] = []
         for i, group in enumerate(replica_devices):
             devices = resolve_devices(group)
@@ -134,12 +140,51 @@ class TesseraCluster:
         return "\n".join(g.describe() for g in self.groups)
 
     # -------------------------------------------------------------- #
+    def kv_bytes(self, prompt_tokens: int) -> float:
+        """Size of the prefill->decode KV-state handoff for one request.
+
+        Attention families carry per-token K and V planes
+        (layers x kv_heads x head_dim x 2 x dtype bytes per token);
+        recurrent families (ssm) hand off a fixed-size state; hybrids
+        both.  Falls back to a per-token heuristic matching the request
+        graph's KV-handoff edge when no model config was provided.
+        """
+        cfg = self.model_cfg
+        if cfg is None:
+            return float(2 * 2 * 128 * prompt_tokens)   # heuristic
+        dt = cfg.jnp_dtype.itemsize
+        total = 0.0
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            # sliding-window caches are ring buffers whose slot layout
+            # depends on absolute positions, so the handoff ships the
+            # WHOLE ring (export_kv never trims it), not just the
+            # filled prefix
+            tok = cfg.sliding_window or prompt_tokens
+            total += (2 * cfg.num_layers * cfg.num_kv_heads
+                      * cfg.head_dim * dt * tok)
+        elif cfg.family == "ssm":       # rwkv6: wkv fp32 + 2 shift rows
+            total += cfg.num_layers * (
+                cfg.rwkv_heads * cfg.rwkv_head_dim ** 2 * 4
+                + 2 * cfg.d_model * dt)
+        elif cfg.family == "hybrid":    # mamba state + shared-attn KV
+            n_attn = (cfg.num_layers + cfg.hybrid_attn_every - 1) \
+                // cfg.hybrid_attn_every
+            total += cfg.num_layers * (
+                cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4
+                + (cfg.conv_width - 1)
+                * (cfg.d_inner + 2 * cfg.ssm_state) * dt)
+            total += (2 * n_attn * cfg.num_kv_heads * cfg.head_dim
+                      * dt * prompt_tokens)
+        return total
+
     def to_cluster_request(self, req: WorkloadRequest) -> ClusterRequest:
         return ClusterRequest(
             rid=req.rid, arrival=req.arrival,
             scale_prompt=req.prompt_tokens / self.base_prompt,
             scale_output=req.output_tokens / self.base_output,
-            session=req.session)
+            session=req.session,
+            kv_bytes=self.kv_bytes(req.prompt_tokens),
+            slo=req.slo, slo_ttft=req.slo_ttft)
 
     def build_replicas(self) -> List[ReplicaModel]:
         """Fresh mutable replica state (queues, monitors, policies)."""
@@ -161,3 +206,13 @@ class TesseraCluster:
         creqs = [self.to_cluster_request(r)
                  for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
         return simulate_cluster(self.build_replicas(), creqs, router)
+
+    def simulate_pd(self, trace: Sequence[WorkloadRequest],
+                    router) -> ClusterResult:
+        """Phase-split replay: ``router`` may return ``(prefill_idx,
+        decode_idx, admit_at)`` (see router.PDRouter); KV-transfer time
+        between groups comes from this cluster's ``interconnect``."""
+        creqs = [self.to_cluster_request(r)
+                 for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
+        return simulate_cluster_pd(self.build_replicas(), creqs, router,
+                                   self.interconnect)

@@ -20,7 +20,13 @@ vLLM-shaped control plane on a JAX data plane:
   * optional Tessera integration: the decode step can be executed by a
     disaggregated StagedExecutable, with the OnlineMonitor switching
     between latency- and throughput-oriented plans (examples/
-    serve_pipeline.py wires this up end to end).
+    serve_pipeline.py wires this up end to end),
+  * prefill/decode disaggregation: ``prefill_handoff`` runs a prompt
+    and exports the per-request KV/recurrent state; ``admit_handoff``
+    on a second engine starts a decode_only session from the imported
+    state (greedy decode is bit-identical to a single-engine run) —
+    the real-engine analogue of the cluster simulator's KV-transfer
+    edge.
 
 Accounting note: completion times are observed at sync boundaries, so a
 request's ``finished`` stamp can be up to ``sync_every - 1`` decode steps
@@ -302,6 +308,100 @@ class ServingEngine:
             else:
                 # completes at prefill (budget spent or EOS sampled)
                 self._finalize(req, t_ready)
+
+    # ------------------------------------------------------------------ #
+    # Prefill/decode disaggregation: two-engine state handoff
+    # ------------------------------------------------------------------ #
+    def prefill_handoff(self, req: Request,
+                        now: Optional[float] = None) -> Dict[str, Any]:
+        """Run ``req``'s prompt on THIS engine and package the result
+        for a decode-only peer (the real-engine analogue of the
+        simulator's KV-transfer edge).
+
+        The prefill runs in a private batch-1 cache — no decode slot is
+        consumed on the prefill engine — and the returned handoff dict
+        carries the per-request state (``export_kv``), the first sampled
+        token, and the wire size.  Feed it to a second engine's
+        :meth:`admit_handoff` to continue decoding there; greedy decode
+        is bit-identical to never having left this engine.
+
+        The request's TTFT is stamped by ``admit_handoff`` (the first
+        token cannot stream before the state lands on the decode
+        engine — same accounting as the simulator's KV-transfer edge)
+        unless the request finishes at prefill, in which case it is
+        finalized here.
+        """
+        assert len(req.prompt) < self.max_len, "prompt exceeds max_len"
+        plen = len(req.prompt)
+        # pad-safe families bucket the prefill length to a multiple of
+        # 8 like admit_batch (exact under causal masking + last_pos
+        # selection; the export below trims to the true length), so a
+        # varied-length trace compiles O(log max_len) prefill variants
+        # instead of one per distinct length.  Recurrent families must
+        # stay exact-length.
+        if self.cfg.family in _PAD_SAFE_FAMILIES:
+            S = min(-(-plen // 8) * 8, self.max_len - 1)
+        else:
+            S = plen
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :plen] = req.prompt
+        cache1 = M.init_cache(self.cfg, 1, self.max_len)
+        if self._prefill_custom is not None:
+            logits, cache1 = self._prefill_custom(
+                self.params, cache1,
+                jnp.asarray(toks[:, :plen], jnp.int32))
+        else:
+            logits, cache1 = self._prefill(
+                cache1, jnp.asarray(toks, jnp.int32),
+                jnp.asarray([plen - 1], jnp.int32))
+        jax.block_until_ready(logits)
+        t_ready = self._now(now)
+        first = int(self._sample_host(logits)[0])
+        self.stats.prefill_batches += 1
+        req.output.append(first)
+        live = req.max_new_tokens > 1 and not (
+            self.eos_id is not None and first == self.eos_id)
+        if not live:        # done at prefill: nothing to hand off
+            req.ttft = t_ready
+            self._finalize(req, t_ready)
+            return {"rid": req.rid, "state": None, "last_tok": first,
+                    "pos": plen, "budget": 0, "kv_bytes": 0,
+                    "done": True}
+        state = M.export_kv(self.cfg, cache1, 0, plen)
+        return {"rid": req.rid, "state": state, "last_tok": first,
+                "pos": plen, "budget": req.max_new_tokens - 1,
+                "kv_bytes": M.kv_state_bytes(state), "done": False}
+
+    def admit_handoff(self, req: Request, handoff: Dict[str, Any],
+                      now: Optional[float] = None) -> bool:
+        """decode_only admission: start a session from imported KV /
+        recurrent state instead of a local prefill.  Returns False when
+        no slot is currently free (retry after draining); raises on a
+        handoff that already finished at prefill (retrying can never
+        succeed).  TTFT is stamped HERE: only once the state lands on
+        the decode engine can the first token stream to the client —
+        the same accounting as the simulator's KV-transfer edge."""
+        if handoff["done"]:
+            raise ValueError(
+                f"request {handoff['rid']} finished at prefill; "
+                "there is no decode to admit")
+        assert handoff["pos"] < self.max_len, \
+            "imported state exceeds this engine's max_len"
+        self.sync(now if now is not None else 0.0)
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free:
+            return False
+        slot = free[0]
+        self.cache = M.import_kv(self.cfg, self.cache, slot,
+                                 handoff["state"])
+        req.ttft = self._now(now)
+        self.pos = self.pos.at[slot].set(handoff["pos"])
+        self.last_tok = self.last_tok.at[slot].set(handoff["last_tok"])
+        self.budget = self.budget.at[slot].set(handoff["budget"])
+        self.active_mask = self.active_mask.at[slot].set(True)
+        self.active[slot] = req
+        self._recompute_remaining()
+        return True
 
     # ------------------------------------------------------------------ #
     # Sync-free decode loop

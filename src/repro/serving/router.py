@@ -29,12 +29,26 @@ re-join the replica that holds their KV/decode state unless its backlog
 exceeds the best candidate's by ``affinity_break`` seconds — then the
 session migrates (modeling a KV refetch as preferable to queueing).
 
+Admission control: routers accepting an ``slo_shed`` flag return ``-1``
+(shed) when every eligible replica's expected completion delay exceeds
+the request's per-request SLO — serving it anyway would burn capacity on
+a request that is already lost, collapsing goodput under overload.
+
+Phase-split routing (``PDRouter``): classifies replica groups into
+prefill-heavy and decode-heavy roles from the cost model's per-group
+profile, routes each request's prefill and decode to different groups
+(an explicit KV-transfer edge connects them, see
+``simulator.simulate_cluster_pd``), and rate-matches the two pools —
+prefill admission is throttled by the decode pool's backlog so the
+decode side never accumulates an unbounded queue of transferred KV
+("Beyond the Buzz", arXiv 2506.05508).
+
 Routers only read replica state; :func:`repro.core.simulator
 .simulate_cluster` (or a real dispatch loop) owns the clock.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import ClusterRequest, ReplicaModel
 
@@ -79,37 +93,163 @@ class LeastLoadedRouter(Router):
 
 
 class JSEDRouter(Router):
-    """Join-shortest-expected-delay with decode-session affinity."""
+    """Join-shortest-expected-delay with decode-session affinity and
+    optional SLO-based admission control."""
 
     name = "jsed"
 
-    def __init__(self, affinity_break: float = float("inf")):
+    def __init__(self, affinity_break: float = float("inf"),
+                 slo_shed: bool = False):
         # Migrate a session when staying costs this many more seconds
         # of backlog than the best replica; inf = never migrate.
         self.affinity_break = affinity_break
+        # Shed a request when even the best replica cannot meet its SLO.
+        self.slo_shed = slo_shed
         self._session_home: Dict[int, int] = {}
 
     def score(self, req: ClusterRequest, replica: ReplicaModel,
               now: float) -> float:
         return replica.backlog(now) + replica.predicted_service(req)
 
+    def _shed(self, req, replica, now) -> bool:
+        """Expected delays on the replica the request will ACTUALLY
+        join (post-affinity) vs its SLO components.  Colocated expected
+        TTFT = queueing + prefill-phase service (decode follows)."""
+        if not self.slo_shed:
+            return False
+        if req.slo is not None and self.score(req, replica, now) > req.slo:
+            return True
+        return (req.slo_ttft is not None
+                and replica.backlog(now)
+                + replica.predicted_phase_service(req, "prefill")
+                > req.slo_ttft)
+
     def route(self, req, replicas, now) -> int:
         best = min(range(len(replicas)),
                    key=lambda i: (self.score(req, replicas[i], now), i))
+        choice = best
         if req.session is not None:
             home = self._session_home.get(req.session)
             if home is not None:
                 stay_cost = replicas[home].backlog(now)
                 move_cost = replicas[best].backlog(now)
                 if stay_cost - move_cost <= self.affinity_break:
-                    return home
+                    choice = home
+        # the SLO check runs against the replica the request will
+        # ACTUALLY join — affinity must not smuggle a doomed request
+        # past admission control
+        if self._shed(req, replicas[choice], now):
+            return -1
+        if req.session is not None and choice == best:
             self._session_home[req.session] = best
-        return best
+        return choice
+
+
+class PDRouter(Router):
+    """Phase-split router: prefill and decode on different groups.
+
+    Role classification — on first routing decision, each group's
+    unqueued prefill-phase and decode-phase service times for a
+    scale-1 request are computed from its own plan's cost model
+    (``ReplicaModel.predicted_phase_service``).  Groups are ranked by
+    ``t_prefill / t_decode``: a LOW ratio means the group drains prompt
+    FLOPs comparatively faster than bandwidth-bound decode (compute-rich
+    hardware) and joins the prefill pool; the rest become the decode
+    pool.  ``prefill_frac`` sets how many groups the prefill pool gets;
+    explicit ``prefill_pool``/``decode_pool`` index lists override the
+    automatic split (the P/D-ratio sweep in benchmarks/pd_split.py).
+
+    Rate matching — before admitting a prefill, the chosen decode
+    group's backlog is compared against ``max_kv_lag`` seconds; any
+    excess delays the prefill admission by that amount.  The decode pool
+    therefore consumes transferred KV at least as fast as prefill
+    produces it (bounded resident-KV, ``ClusterResult.peak_kv_bytes``)
+    instead of queueing state for requests whose decode is hours away.
+
+    Routing within each pool is JSED restricted to the pool's members;
+    with ``slo_shed`` the request is shed when the expected phase-split
+    completion delay already exceeds its SLO.
+    """
+
+    name = "pd_split"
+
+    def __init__(self, *, prefill_frac: float = 0.5,
+                 prefill_pool: Optional[Sequence[int]] = None,
+                 decode_pool: Optional[Sequence[int]] = None,
+                 max_kv_lag: float = 0.25,
+                 slo_shed: bool = False):
+        assert 0.0 < prefill_frac < 1.0 or prefill_pool is not None
+        self.prefill_frac = prefill_frac
+        self.max_kv_lag = max_kv_lag
+        self.slo_shed = slo_shed
+        self._pools: Optional[Tuple[List[int], List[int]]] = None
+        if prefill_pool is not None or decode_pool is not None:
+            assert prefill_pool and decode_pool, \
+                "override both pools or neither"
+            assert not set(prefill_pool) & set(decode_pool), \
+                "pools must be disjoint"
+            self._pools = (list(prefill_pool), list(decode_pool))
+
+    # -------------------------------------------------------------- #
+    def pools(self, replicas: Sequence[ReplicaModel]
+              ) -> Tuple[List[int], List[int]]:
+        """(prefill_pool, decode_pool) indices, classifying lazily."""
+        if self._pools is None:
+            self._pools = self._classify(replicas)
+        return self._pools
+
+    def _classify(self, replicas) -> Tuple[List[int], List[int]]:
+        if len(replicas) < 2:       # degenerate: colocate on the one
+            return [0], [0]
+        probe = ClusterRequest(rid=-1, arrival=0.0)
+        ratio = []
+        for i, rep in enumerate(replicas):
+            tp = rep.predicted_phase_service(probe, "prefill")
+            td = rep.predicted_phase_service(probe, "decode")
+            ratio.append((tp / max(td, 1e-12), i))
+        ratio.sort()
+        n_pre = min(max(int(round(self.prefill_frac * len(replicas))), 1),
+                    len(replicas) - 1)
+        pre = sorted(i for _, i in ratio[:n_pre])
+        dec = sorted(i for _, i in ratio[n_pre:])
+        return pre, dec
+
+    def _best(self, pool: List[int], req, replicas, now,
+              phase: str) -> int:
+        return min(pool, key=lambda i: (
+            replicas[i].backlog(now)
+            + replicas[i].predicted_phase_service(req, phase), i))
+
+    # -------------------------------------------------------------- #
+    def route(self, req, replicas, now):
+        """Returns (prefill_idx, decode_idx, admit_at) — or -1 (shed),
+        or a plain index when the pools degenerate to one group."""
+        pre_pool, dec_pool = self.pools(replicas)
+        p = self._best(pre_pool, req, replicas, now, "prefill")
+        d = self._best(dec_pool, req, replicas, now, "decode")
+        if p == d:
+            return p
+        # rate matching: delay prefill admission by the decode group's
+        # backlog beyond the tolerated lag, so prefill production tracks
+        # decode-side KV consumption
+        lag = max(0.0, replicas[d].backlog(now) - self.max_kv_lag)
+        if self.slo_shed:
+            expect_ttft = (lag + replicas[p].backlog(now)
+                           + replicas[p].predicted_phase_service(
+                               req, "prefill"))
+            expect = expect_ttft + replicas[d].predicted_phase_service(
+                req, "decode")
+            if req.slo is not None and expect > req.slo:
+                return -1
+            if req.slo_ttft is not None and expect_ttft > req.slo_ttft:
+                return -1
+        return p, d, now + lag
 
 
 ROUTERS = {
     cls.name: cls
-    for cls in (RoundRobinRouter, LeastLoadedRouter, JSEDRouter)
+    for cls in (RoundRobinRouter, LeastLoadedRouter, JSEDRouter,
+                PDRouter)
 }
 
 

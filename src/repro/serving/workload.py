@@ -34,6 +34,8 @@ class WorkloadRequest:
     prompt_tokens: int
     output_tokens: int
     session: Optional[int] = None   # multi-turn conversation id
+    slo: Optional[float] = None     # completion deadline (s of latency)
+    slo_ttft: Optional[float] = None    # first-token deadline (s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +196,33 @@ def make_trace(kind: str, rate: float, num_requests: int, seed: int = 0,
         raise ValueError(f"unknown trace kind {kind!r}; "
                          f"pick from {sorted(TRACE_KINDS)}") from None
     return gen(rate, num_requests, seed, **kw)
+
+
+# --------------------------------------------------------------------- #
+def assign_slos(trace: Sequence[WorkloadRequest], *,
+                base: float = 0.0,
+                per_output_token: float = 0.0,
+                ttft: Optional[float] = None
+                ) -> List[WorkloadRequest]:
+    """Attach per-request SLOs.
+
+    Completion deadline: ``base + per_output_token * output_tokens``
+    seconds of end-to-end latency — size-proportional, as production
+    SLOs are (a 2k-token generation is allowed more wall time than a
+    1-token classification).  ``ttft`` adds a first-token deadline: the
+    interactivity SLO that phase-split serving isolates from decode
+    head-of-line blocking.  Routers with ``slo_shed`` use the deadlines
+    for admission control, and results report goodput (completions
+    within BOTH deadlines) next to raw throughput.
+    """
+    assert base > 0.0 or per_output_token > 0.0 or ttft, \
+        "SLO must be positive"
+    comp = None if base <= 0.0 and per_output_token <= 0.0 else True
+    return [dataclasses.replace(
+        r,
+        slo=(base + per_output_token * r.output_tokens) if comp else None,
+        slo_ttft=ttft)
+        for r in trace]
 
 
 # --------------------------------------------------------------------- #

@@ -1,6 +1,6 @@
 """Phase-split (prefill/decode) vs colocated serving across P/D ratios.
 
-  PYTHONPATH=src python benchmarks/pd_split.py [--quick] \
+  PYTHONPATH=src python benchmarks/pd_split.py [--quick] [--overlap] \
       [--out BENCH_pd_split.json] [--check]
 
 Reproduces the paper's headline heterogeneous scenario on the
@@ -27,11 +27,28 @@ Arrival rates are calibrated per mix from a short deep-overload run
 ``cluster.capacity`` upper bound, so rates derived from the latter
 would drive every router super-critical and flatten the comparison).
 
+The pool sweep includes a REVERSED orientation (``1:3r``: prefill on a
+cheap group, the fastest group kept in the decode pool) — on mixes
+where one group dominates, fencing it into prefill wastes it, and the
+reversed split is what flips hetero-b200+3h100 from a loss to a win.
+
+``--overlap`` additionally sweeps chunked KV streaming
+(``simulate_cluster_pd(kv_chunks=n)``): per-chunk transfers overlap
+the remaining prefill compute, so only the tail of the transfer lands
+in TTFT.  An optimal chunk count exists (few chunks defer bytes past
+prefill-end; many chunks drown in per-transfer ``base_latency``), and
+a session-affinity variant reports transfers avoided by running
+follow-up turns on the decode group that holds their resident state.
+
 Output follows the repo CSV contract: ``name,us_per_call,derived``
 with mean request latency (us) in the middle column and the headline
-quantity in ``derived``.  ``--check`` gates the acceptance criterion:
+quantity in ``derived``.  ``--check`` gates the acceptance criteria:
 phase-split must beat colocated goodput AND TTFT on at least one
-heterogeneous mix (and hold >= 95% of colocated saturated throughput).
+heterogeneous mix (>= 95% of colocated saturated throughput); with
+``--overlap`` it additionally requires that streaming never regresses
+TTFT past the serial split and that, on at least one heterogeneous
+mix, overlap removes >= 50% of the per-request transfer seconds from
+mean TTFT.
 """
 from __future__ import annotations
 
@@ -70,12 +87,18 @@ MIXES = {
                           ("h100", "rtxpro6000"), ("h100", "rtxpro6000")],
     "homog-4xh100": [("h100", "rtxpro6000")] * 4,
 }
-# prefill:decode pool splits swept per mix (group indices)
+# prefill:decode pool splits swept per mix (group indices); "1:3r" is
+# the reversed orientation — prefill on the LAST group, so the fastest
+# group (index 0) serves the heavier decode pool instead of being
+# fenced into prefill
 PD_RATIOS = {
     "1:3": ([0], [1, 2, 3]),
+    "1:3r": ([3], [0, 1, 2]),
     "2:2": ([0, 1], [2, 3]),
     "3:1": ([0, 1, 2], [3]),
 }
+# kv_chunks counts swept in --overlap mode
+KV_CHUNKS = (2, 4, 8, 16, 32)
 
 
 def build_cluster(mix: Sequence[Tuple[str, str]],
@@ -96,7 +119,7 @@ def saturated_throughput(cluster: TesseraCluster, n_req: int) -> float:
     return cluster.simulate(trace, JSEDRouter()).throughput
 
 
-def run_mix(mix_name: str, mix, quick: bool
+def run_mix(mix_name: str, mix, quick: bool, overlap: bool = False
             ) -> Tuple[List[Row], Dict]:
     rows: List[Row] = []
     n_req = 120 if quick else 300
@@ -123,22 +146,25 @@ def run_mix(mix_name: str, mix, quick: bool
            f"|shed={co_shed.shed}")
     record("colocated.overload", co_sat)
 
-    # phase-split across P/D pool ratios + the automatic classifier
+    # phase-split across P/D pool ratios + the automatic classifier.
+    # Factories hand out a FRESH router per run (session-affinity and
+    # pool-classification state must not leak between replays).
     best = None
-    routers = {f"split-{k}": PDRouter(prefill_pool=p, decode_pool=d,
-                                      max_kv_lag=1.0)
-               for k, (p, d) in PD_RATIOS.items()}
-    routers["split-auto"] = PDRouter(prefill_frac=0.25, max_kv_lag=1.0)
+    factories = {
+        f"split-{k}": (lambda p=p, d=d, **kw: PDRouter(
+            prefill_pool=p, decode_pool=d, max_kv_lag=1.0, **kw))
+        for k, (p, d) in PD_RATIOS.items()}
+    factories["split-auto"] = lambda **kw: PDRouter(
+        prefill_frac=0.25, max_kv_lag=1.0, **kw)
     pd_sat_best = 0.0
-    for tag, router in routers.items():
-        r = cluster.simulate_pd(stable, router)
+    for tag, mk in factories.items():
+        r = cluster.simulate_pd(stable, mk())
         record(f"{tag}.stable", r,
                f"|kvpeak={r.peak_kv_bytes / 1e6:.0f}MB"
                f"|xfer={r.transfers}")
         if best is None or r.goodput > best[1].goodput:
             best = (tag, r)
-        # routers keep no per-request state; pools stay as classified
-        r_sat = cluster.simulate_pd(overload, router)
+        r_sat = cluster.simulate_pd(overload, mk())
         record(f"{tag}.overload", r_sat)
         pd_sat_best = max(pd_sat_best, r_sat.throughput)
 
@@ -163,6 +189,43 @@ def run_mix(mix_name: str, mix, quick: bool
                  f"good_x{summary['goodput_ratio']:.3f}"
                  f"|ttft_x{summary['ttft_ratio']:.3f}"
                  f"|sat_x{summary['sat_throughput_ratio']:.3f}"))
+
+    if overlap:
+        # chunked KV streaming at the best split: sweep kv_chunks and
+        # measure how much of the serial transfer leaves TTFT
+        mk = factories[tag]
+        xfer_per = r.transfer_seconds / max(r.completed, 1)
+        best_n, best_r = 1, r
+        for n in KV_CHUNKS:
+            ro = cluster.simulate_pd(stable, mk(), kv_chunks=n)
+            record(f"{tag}.overlap-n{n}.stable", ro)
+            if ro.mean_ttft < best_r.mean_ttft:
+                best_n, best_r = n, ro
+        removed = r.mean_ttft - best_r.mean_ttft
+        frac = removed / max(xfer_per, 1e-12)
+        rows.append((f"pd.{mix_name}.overlap_transfer_removed", 0.0,
+                     f"chunks={best_n}|removed={removed * 1e3:.3f}ms"
+                     f"|xfer_per_req={xfer_per * 1e3:.3f}ms"
+                     f"|frac={frac:.2f}"))
+        summary["overlap"] = {
+            "chunks": best_n, "ttft": best_r.mean_ttft,
+            "serial_ttft": r.mean_ttft, "goodput": best_r.goodput,
+            "transfer_per_req": xfer_per,
+            "frac_transfer_removed": frac,
+        }
+        # decode-session affinity: follow-up turns reuse the decode
+        # group's resident state (no re-transfer); the backlog break
+        # keeps a hot home group from absorbing unbounded prefill work
+        ra = cluster.simulate_pd(
+            stable, mk(session_affinity=True, affinity_break=0.1),
+            kv_chunks=best_n)
+        record(f"{tag}.overlap+affinity.stable", ra,
+               f"|avoided={ra.transfers_avoided}")
+        summary["affinity"] = {
+            "ttft": ra.mean_ttft, "goodput": ra.goodput,
+            "transfers": ra.transfers,
+            "transfers_avoided": ra.transfers_avoided,
+        }
     return rows, summary
 
 
@@ -170,17 +233,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized sweep (fewer requests, less anneal)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also sweep chunked KV streaming (kv_chunks) "
+                         "and the session-affinity variant")
     ap.add_argument("--out", default=None, metavar="JSON",
                     help="write machine-readable results")
     ap.add_argument("--check", action="store_true",
                     help="fail unless phase-split beats colocated on a "
-                         "heterogeneous mix (the acceptance gate)")
+                         "heterogeneous mix (the acceptance gate); with "
+                         "--overlap also gate transfer-overlap wins")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     summaries = []
     for mix_name, mix in MIXES.items():
-        rows, summary = run_mix(mix_name, mix, args.quick)
+        rows, summary = run_mix(mix_name, mix, args.quick, args.overlap)
         summaries.append(summary)
         for name, us, derived in rows:
             print(f"{name},{us:.2f},{derived}")
@@ -189,17 +256,41 @@ def main() -> None:
     wins = [s for s in hetero
             if s["goodput_ratio"] >= 1.0 and s["ttft_ratio"] > 1.0
             and s["sat_throughput_ratio"] >= 0.95]
+    gate: Dict = {"hetero_wins": [s["mix"] for s in wins],
+                  "passed": bool(wins)}
+    if args.overlap:
+        # overlap gates: streaming must never regress TTFT past the
+        # serial split (the sender's serial fallback guarantees the
+        # per-request property; this checks it end to end), and on at
+        # least one hetero mix it must strip >= 50% of the per-request
+        # transfer seconds out of mean TTFT
+        regress = [s["mix"] for s in summaries
+                   if s["overlap"]["ttft"]
+                   > s["overlap"]["serial_ttft"] + 1e-9]
+        recovered = [s["mix"] for s in hetero
+                     if s["overlap"]["frac_transfer_removed"] >= 0.5]
+        gate["overlap_no_regression"] = not regress
+        gate["overlap_recovered_hetero"] = recovered
+        gate["passed"] = bool(gate["passed"] and not regress
+                              and recovered)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"bench": "pd_split", "quick": args.quick,
-                       "mixes": summaries,
-                       "gate": {"hetero_wins": [s["mix"] for s in wins],
-                                "passed": bool(wins)}}, f, indent=2)
+                       "overlap": args.overlap,
+                       "mixes": summaries, "gate": gate}, f, indent=2)
         print(f"# wrote {args.out}", file=sys.stderr)
     if args.check:
         assert wins, (
             "phase-split failed to beat colocated routing on every "
             f"heterogeneous mix: {json.dumps(hetero, indent=2)}")
+        if args.overlap:
+            assert gate["overlap_no_regression"], (
+                "overlapped KV streaming regressed mean TTFT past the "
+                f"serial split on {regress}")
+            assert recovered, (
+                "overlap failed to remove >=50% of transfer seconds "
+                "from TTFT on any heterogeneous mix: "
+                + json.dumps([s["overlap"] for s in hetero], indent=2))
         print(f"# CHECK OK: phase-split beats colocated on "
               f"{[s['mix'] for s in wins]}", file=sys.stderr)
 

@@ -95,6 +95,17 @@ for name, model_v, wall_v in (
     ratio = wall_v / max(model_v, 1e-12)
     print(f"  {name:<12}{model_v * 1e3:>10.3f}ms{wall_v * 1e3:>10.3f}ms"
           f"   (wall/model {ratio:,.0f}x)")
+# machine-readable modeled-vs-wall gap: the tracked baseline for the
+# cost-model calibration follow-on (one JSON object per line, greppable
+# by CALIBRATION)
+import json                                            # noqa: E402
+modeled_tpot = plans[monitor.policy].bottleneck
+print("CALIBRATION " + json.dumps({
+    "modeled_ttft_s": modeled_ttft, "wall_ttft_s": s["mean_ttft"],
+    "ttft_wall_over_model": s["mean_ttft"] / max(modeled_ttft, 1e-12),
+    "modeled_tpot_s": modeled_tpot, "wall_tpot_s": s["mean_tpot"],
+    "tpot_wall_over_model": s["mean_tpot"] / max(modeled_tpot, 1e-12),
+}))
 print(f"monitor: policy={monitor.policy} switches={monitor.switches}")
 print("sample output tokens:", reqs[0].output)
 
@@ -147,3 +158,43 @@ print(f"requests={len(split)}  KV wire bytes={wire_bytes}  "
 print(f"decode-only engine: {decode_engine.stats.summary()}")
 print("bit-identical to single engine:", match)
 assert match, "phase-split decode diverged from the single-engine run"
+
+# --- overlapped handoff: (layer, chunk) shards stream during prefill -- #
+# prefill_handoff_stream yields each layer's KV for a chunk the moment
+# the chunk's prefill completes; admit_handoff_stream installs shards
+# eagerly and starts decoding when the last one lands.  On real
+# hardware the shard transfers ride the fabric concurrently with the
+# remaining prefill compute, so only the transfer tail lands in TTFT
+# (the engine analogue of simulate_cluster_pd(kv_chunks=n)).
+print("\n--- overlapped handoff (streamed (layer, chunk) shards) ---")
+streamed = requests_from_trace(pd_trace, cfg.vocab_size,
+                               max_prompt=PROMPT_CAP, max_new=NEW_CAP,
+                               time_scale=0.0)
+pre_s = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                      prefill_chunk=4)
+dec_s = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                      sync_every=4)
+n_shards = shard_bytes = 0
+t0 = time.perf_counter()
+for req in streamed:
+    def counted(gen):
+        global n_shards, shard_bytes
+        for item in gen:
+            if not item.get("header"):
+                n_shards += 1
+                shard_bytes += item["bytes"]
+            yield item
+    while not dec_s.admit_handoff_stream(
+            req, counted(pre_s.prefill_handoff_stream(
+                req, time.perf_counter() - t0)),
+            time.perf_counter() - t0):
+        dec_s.step(time.perf_counter() - t0)    # drain a slot, retry
+while dec_s._any_active():
+    dec_s.step(time.perf_counter() - t0)
+dec_s.sync(time.perf_counter() - t0)
+match_s = all(a.output == b.output for a, b in zip(single, streamed))
+per_chunk = ic.transfer_time(shard_bytes / max(n_shards, 1), 0, 1)
+print(f"requests={len(streamed)}  shards={n_shards}  "
+      f"bytes={shard_bytes}  modeled tail/shard={per_chunk * 1e6:.1f}us")
+print("streamed decode bit-identical to single engine:", match_s)
+assert match_s, "streamed handoff diverged from the single-engine run"

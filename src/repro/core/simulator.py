@@ -454,14 +454,18 @@ class ReplicaModel:
     def _run_units(self, req: ClusterRequest,
                    events: Optional[List[Tuple]] = None,
                    phase: str = "both",
-                   not_before: float = 0.0) -> Tuple[float, float]:
+                   not_before: float = 0.0) -> Tuple[float, float, float]:
         """Walk the request's stage units; returns ``(finish,
-        prefill_end)`` where ``prefill_end`` is when the last unit with
-        any prefill share completes (the first token's timestamp for a
-        colocated or prefill-phase submission)."""
+        prefill_end, start)`` where ``prefill_end`` is when the last
+        unit with any prefill share completes (the first token's
+        timestamp for a colocated or prefill-phase submission) and
+        ``start`` is when the first unit actually began (after
+        queueing) — the anchor chunked KV streaming interpolates
+        production progress from."""
         sp, so = _phase_scales(req, phase)
         t = max(req.arrival, not_before)
         prefill_end = t
+        start_t: Optional[float] = None
         for u in self.unit_sets[self.policy]:
             dur = u.scaled(sp, so)
             if dur <= 0.0:
@@ -469,6 +473,8 @@ class ReplicaModel:
             free = self.link_free if u.kind == 0 else self.dev_free
             busy = self.link_busy if u.kind == 0 else self.dev_busy
             start = max(t, free[u.device])
+            if start_t is None:
+                start_t = start
             end = start + dur
             free[u.device] = end
             busy[u.device] += dur
@@ -485,7 +491,7 @@ class ReplicaModel:
         heapq.heappush(self._finish, t)
         if phase != "prefill":      # the decode side owns completion
             self.completed += 1
-        return t, prefill_end
+        return t, prefill_end, (start_t if start_t is not None else t)
 
     def maybe_switch(self, now: float) -> bool:
         """Adopt the monitor's policy; a switch stalls all workers for
@@ -522,6 +528,8 @@ class ClusterResult:
     transfers: int = 0                  # cross-replica KV handoffs
     transfer_seconds: float = 0.0       # summed KV time on the fabric
     peak_kv_bytes: float = 0.0          # max KV resident awaiting decode
+    transfers_avoided: int = 0          # session-affine reuse of resident
+    #                                     decode state (no re-transfer)
 
     @property
     def throughput(self) -> float:
@@ -585,7 +593,7 @@ def simulate_cluster(replicas: Sequence[ReplicaModel],
             shed += 1
             continue
         rep = replicas[idx]
-        finish, first_tok = rep._run_units(req, events)
+        finish, first_tok, _ = rep._run_units(req, events)
         assignments.append(idx)
         lat = finish - req.arrival
         latencies.append(lat)
@@ -632,11 +640,53 @@ def simulate_cluster(replicas: Sequence[ReplicaModel],
 KV_TRANSFER = 2
 
 
+def _stream_kv(ic: Interconnect, nbytes: float, src: int, dst: int,
+               pre_start: float, pre_fin: float, chunks: int
+               ) -> Tuple[float, List[Tuple[float, float]], float]:
+    """KV-arrival time of a (possibly chunked) prefill→decode handoff.
+
+    Returns ``(kv_at, fabric_events, fabric_busy_seconds)``.
+
+    ``chunks <= 1`` is the serial edge: one transfer starting at
+    ``pre_fin`` (PR-3 semantics, bit-identical).  With ``chunks > 1``
+    the prefill produces KV progressively — chunk c becomes available
+    at the c/n point of the prefill span — and each chunk's transfer
+    (``base_latency`` amortized per chunk) starts as soon as both the
+    chunk and the fabric are ready, overlapping communication with the
+    remaining prefill compute.  Only the tail that outlives the prefill
+    lands in TTFT, so an optimal chunk size exists: large chunks defer
+    too many bytes past ``pre_fin``, tiny chunks drown in per-transfer
+    ``base_latency``.
+
+    The sender knows every unit duration up front (simulated time), so
+    it falls back to the serial schedule whenever chunking would lose —
+    streamed ``kv_at`` is therefore NEVER later than the serial edge
+    (property-tested).
+    """
+    serial_dur = ic.transfer_time(nbytes, src, dst)
+    serial = (pre_fin + serial_dur, [(pre_fin, pre_fin + serial_dur)],
+              serial_dur)
+    span = pre_fin - pre_start
+    if chunks <= 1 or nbytes <= 0.0 or src == dst or span <= 0.0:
+        return serial
+    per = ic.base_latency + (nbytes / chunks) / ic.bandwidth(src, dst)
+    done = pre_start
+    evs: List[Tuple[float, float]] = []
+    for c in range(1, chunks + 1):
+        ready = pre_start + span * c / chunks
+        s = max(ready, done)
+        done = s + per
+        evs.append((s, done))
+    if done <= serial[0]:
+        return done, evs, per * chunks
+    return serial
+
+
 def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
                         trace: Sequence[ClusterRequest],
                         route_fn,
-                        interconnect: Optional[Interconnect] = None
-                        ) -> ClusterResult:
+                        interconnect: Optional[Interconnect] = None,
+                        kv_chunks: int = 1) -> ClusterResult:
     """Cluster simulation where the router may split phases.
 
     ``route_fn(req, replicas, now)`` returns either a plain replica
@@ -644,6 +694,13 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
     decode_idx, admit_at)`` — ``admit_at >= now`` is the rate-matched
     prefill admission time (see router.PDRouter).  Deterministic like
     :func:`simulate_cluster`.
+
+    ``kv_chunks > 1`` enables OVERLAPPED KV streaming: the single
+    kind-2 transfer edge is replaced by per-chunk transfer events that
+    run concurrently with the remaining prefill units (see
+    :func:`_stream_kv`), so only the transfer tail lands in TTFT.
+    Routers exposing a ``transfers_avoided`` counter (PDRouter
+    session affinity) have the per-run delta reported in the result.
     """
     ic = interconnect or Interconnect()
     events: List[Tuple] = []
@@ -657,6 +714,7 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
     max_finish = 0.0
     shed = slo_ok = transfers = 0
     transfer_seconds = 0.0
+    avoided0 = int(getattr(route_fn, "transfers_avoided", 0))
     for req in trace:
         decision = route_fn(req, replicas, req.arrival)
         if not isinstance(decision, tuple):
@@ -671,8 +729,8 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
             admit_at = max(admit_at, req.arrival)
         if p_idx == d_idx:
             rep = replicas[p_idx]
-            finish, first_tok = rep._run_units(req, events, "both",
-                                               admit_at)
+            finish, first_tok, _ = rep._run_units(req, events, "both",
+                                                  admit_at)
             ttft = first_tok - req.arrival
             if rep.monitor is not None:
                 rep.monitor.record_request(
@@ -681,14 +739,17 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
                 rep.maybe_switch(req.arrival)
         else:
             pre, dec = replicas[p_idx], replicas[d_idx]
-            pre_fin, _ = pre._run_units(req, events, "prefill", admit_at)
-            tdur = ic.transfer_time(req.kv_bytes, p_idx, d_idx)
-            kv_at = pre_fin + tdur
-            events.append((d_idx, req.rid, KV_TRANSFER, p_idx,
-                           pre_fin, kv_at))
+            pre_fin, _, pre_start = pre._run_units(req, events,
+                                                   "prefill", admit_at)
+            kv_at, xfer_evs, busy = _stream_kv(
+                ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
+                kv_chunks)
+            for (x0, x1) in xfer_evs:
+                events.append((d_idx, req.rid, KV_TRANSFER, p_idx,
+                               x0, x1))
             transfers += 1
-            transfer_seconds += tdur
-            finish, _ = dec._run_units(req, events, "decode", kv_at)
+            transfer_seconds += busy
+            finish, _, _ = dec._run_units(req, events, "decode", kv_at)
             # first token streams from the decode group once the state
             # lands there — transfer time is part of TTFT
             ttft = kv_at - req.arrival
@@ -731,7 +792,9 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
         price_rate=sum(r.price for r in replicas),
         ttfts=ttfts, shed=shed, slo_ok=slo_ok,
         transfers=transfers, transfer_seconds=transfer_seconds,
-        peak_kv_bytes=_peak_concurrent(kv_resident))
+        peak_kv_bytes=_peak_concurrent(kv_resident),
+        transfers_avoided=int(getattr(route_fn, "transfers_avoided", 0))
+        - avoided0)
 
 
 def _peak_concurrent(intervals: Sequence[Tuple[float, float, float]]

@@ -212,6 +212,11 @@ def attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
     Modes:
       * kv_cache=None, cross_kv=None: full self-attention (train/encoder).
       * kv_cache given + x.shape[1] == cache capacity write: prefill fill.
+      * kv_cache given + multi-token x + scalar ``cache_pos``: CHUNKED
+        prefill — this chunk's K/V are written at offset ``cache_pos``
+        and queries attend over the whole cache (the already-filled
+        prefix plus this chunk; unfilled higher slots are excluded by
+        the causal mask, so the result equals whole-prompt prefill).
       * kv_cache given + single-token x: decode step, in-place cache
         update at ``cache_pos`` (ring-buffer position for SWA).
       * cross_kv given: cross-attention over precomputed encoder K/V.
@@ -265,6 +270,27 @@ def attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                 y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
                 return y, new_cache
             q_offset = positions[:, 0]                          # (B,)
+        elif cache_pos is not None:
+            # chunked prefill: write this chunk's K/V at the scalar
+            # offset and attend over the full cache.  Slots below the
+            # offset hold earlier chunks; slots at or above the chunk
+            # end are zero-filled but carry kpos > qpos, so the causal
+            # mask excludes them — exactness needs no valid-length
+            # bookkeeping.  (Ring-buffer SWA caches never take this
+            # path: their slot layout wraps at the window.)
+            assert window is None, \
+                "chunked prefill is undefined for ring-buffer SWA caches"
+            off = jnp.asarray(cache_pos, jnp.int32)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["k"], k.astype(kv_cache["k"].dtype), off,
+                    axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    kv_cache["v"], v.astype(kv_cache["v"].dtype), off,
+                    axis=1),
+            }
+            k, v = new_cache["k"], new_cache["v"]
+            q_offset = off
         else:
             # prefill: fill cache[0:S]
             new_cache = {

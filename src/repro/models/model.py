@@ -391,7 +391,8 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Params, *, patch_embeds=None, positions3=None,
             enc_embeds=None, scan_layers: bool = True,
             q_chunk: int = 512,
-            last_pos: Optional[jnp.ndarray] = None
+            last_pos: Optional[jnp.ndarray] = None,
+            offset: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Params]:
     """Process the prompt, fill caches, return last-position logits.
 
@@ -399,17 +400,35 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     literal final column — used by continuous-batching engines that
     right-pad a multi-request admission batch to a common length (each
     row's true prompt ends at its own index).
+
+    ``offset`` switches to CHUNK mode: ``tokens`` are the prompt slice
+    at absolute positions [offset, offset+Sq) and the cache already
+    holds the state of the preceding chunks.  Attention K/V are written
+    at the offset and queries attend over the filled prefix + this
+    chunk (exact under causal masking); recurrent state threads through
+    the cache by construction.  Driving successive chunks through this
+    path is exactly :func:`prefill_chunked`.  ``last_pos`` stays
+    chunk-relative in this mode.  Ring-buffer (sliding-window) caches
+    and encdec are not chunkable (wrap-around slot layout / encoder
+    coupling).
     """
     B, Sq = tokens.shape
     x = _embed_inputs(params, cfg, tokens, patch_embeds)
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if offset is not None:
+        assert cfg.family in ("dense", "moe", "ssm", "hybrid"), \
+            "chunked prefill serves decoder-only families"
+        assert cfg.sliding_window is None, \
+            "chunked prefill is undefined for ring-buffer SWA caches"
+        positions = positions + jnp.asarray(offset, jnp.int32)
     new_cache = dict(cache)
 
     if cfg.family in ("dense", "moe", "vlm"):
         def body(x, xs):
             lp, ck, cv = xs
             y, nc = _dense_block(lp, x, cfg, positions=positions,
-                                 cache={"k": ck, "v": cv}, cache_pos=None,
+                                 cache={"k": ck, "v": cv},
+                                 cache_pos=offset,
                                  positions3=positions3,
                                  tagged=not scan_layers)
             return y, (nc["k"], nc["v"])
@@ -446,6 +465,7 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             lp_group, mamba_g, ck, cv = xs
             x, nc = _shared_attn_block(sp, x, cfg, positions=positions,
                                        cache={"k": ck, "v": cv},
+                                       cache_pos=offset,
                                        tagged=not scan_layers)
             new_m = []
             for j in range(k):
@@ -507,6 +527,80 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     return L.unembed(params["embed"], xl, cfg)[:, 0], new_cache
 
 
+def iter_prefill_chunks(params: Params, cfg: ModelConfig,
+                        tokens, cache: Params, *, chunk_size: int,
+                        last_pos: Optional[jnp.ndarray] = None,
+                        scan_layers: bool = True, prefill_call=None):
+    """Drive ``prefill(offset=)`` over fixed-size prompt chunks,
+    yielding ``(t0, t1, logits, cache)`` after each — ``logits`` is
+    the per-row last-position selection over all chunks SO FAR, so the
+    final yield carries exactly :func:`prefill`'s result.
+
+    The single source of the chunk-walk logic (range/clip/row-select):
+    :func:`prefill_chunked` drains it, the serving engine interleaves
+    decode steps between its yields, and the streamed handoff exports
+    (layer, chunk) KV shards at each yield.
+
+    ``prefill_call(cache, tokens_chunk, offset, rel_last) -> (logits,
+    cache)`` lets callers inject a jitted chunk step; defaults to the
+    plain :func:`prefill`.
+    """
+    B, S = tokens.shape
+    assert chunk_size >= 1
+    assert cfg.sliding_window is None, \
+        "chunked prefill is undefined for ring-buffer SWA caches"
+    if prefill_call is None:
+        def prefill_call(c, t, off, lp):
+            return prefill(params, cfg, jnp.asarray(t, jnp.int32), c,
+                           offset=off, last_pos=lp,
+                           scan_layers=scan_layers)
+    last = (jnp.full((B,), S - 1, jnp.int32) if last_pos is None
+            else jnp.asarray(last_pos, jnp.int32))
+    logits = None
+    for t0 in range(0, S, chunk_size):
+        t1 = min(t0 + chunk_size, S)
+        rel = jnp.clip(last - t0, 0, t1 - t0 - 1)
+        lg, cache = prefill_call(cache, tokens[:, t0:t1],
+                                 jnp.asarray(t0, jnp.int32), rel)
+        # keep each row's logits from the chunk containing its last
+        # position (rows whose prompt ended earlier ignore later chunks)
+        sel = (last >= t0) & (last < t1)
+        logits = lg if logits is None else \
+            jnp.where(sel[:, None], lg, logits)
+        yield t0, t1, logits, cache
+
+
+def prefill_chunked(params: Params, cfg: ModelConfig,
+                    tokens: jnp.ndarray, cache: Params, *,
+                    chunk_size: int,
+                    last_pos: Optional[jnp.ndarray] = None,
+                    scan_layers: bool = True,
+                    prefill_call=None) -> Tuple[jnp.ndarray, Params]:
+    """Whole-prompt prefill as a sequence of fixed-size chunks.
+
+    Equivalent to :func:`prefill` (same final logits and cache): each
+    chunk updates the cache incrementally through ``prefill(offset=)``,
+    which is exact for recurrent families by construction and
+    causal-mask-safe for attention families.  This is what lets a
+    serving engine (a) interleave decode steps of live slots between
+    the chunks of a long admitted prompt and (b) stream completed
+    (layer, chunk) KV shards to a decode engine while later chunks
+    still compute.  Ring-buffer SWA caches fall back to one
+    whole-prompt prefill (wrap-around slot layout is not chunkable).
+    """
+    S = tokens.shape[1]
+    if cfg.sliding_window is not None or chunk_size >= S:
+        return prefill(params, cfg, tokens, cache, last_pos=last_pos,
+                       scan_layers=scan_layers)
+    logits = None
+    for _, _, logits, cache in iter_prefill_chunks(
+            params, cfg, tokens, cache, chunk_size=chunk_size,
+            last_pos=last_pos, scan_layers=scan_layers,
+            prefill_call=prefill_call):
+        pass
+    return logits, cache
+
+
 # --------------------------------------------------------------------- #
 # Per-request state handoff (prefill/decode disaggregation)
 # --------------------------------------------------------------------- #
@@ -562,6 +656,93 @@ def kv_state_bytes(state: Params) -> int:
     """Wire size of an exported state (what the interconnect carries)."""
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree_util.tree_leaves(state))
+
+
+# --------------------------------------------------------------------- #
+# Layer-granular shards: the streaming unit of a pipelined handoff.
+# export_kv emits one monolithic payload only after the whole prompt
+# finishes; these shards let a prefill engine ship each (component,
+# layer[, token-range]) slice as soon as it is computed, overlapping
+# the fabric transfer with the remaining prefill compute.  Installing
+# every shard of a request == import_kv of its whole export.
+# --------------------------------------------------------------------- #
+def cache_layer_counts(cache: Params) -> Dict[str, int]:
+    """Leading (layer) dimension per cache component — components can
+    disagree (a hybrid's shared-attn KV has fewer layers than its
+    mamba state)."""
+    return {key: jax.tree_util.tree_leaves(val)[0].shape[0]
+            for key, val in cache.items()}
+
+
+def export_kv_shard(cfg: ModelConfig, cache: Params, slot: int,
+                    key: str, layer: int,
+                    t0: Optional[int] = None,
+                    t1: Optional[int] = None) -> Params:
+    """One layer's slice of one sequence's state.
+
+    For attention KV (``key == "kv"``) an optional token range
+    ``[t0, t1)`` selects a chunk of the time axis — the (layer, chunk)
+    granularity of a streamed handoff.  Ring-buffer (sliding-window) KV
+    and recurrent state ignore the range and ship the whole layer
+    (ring slot layout depends on absolute positions; recurrent state is
+    fixed-size and only its final value matters).
+    """
+    sub = jax.tree_util.tree_map(
+        lambda a: a[layer:layer + 1, slot:slot + 1], cache[key])
+    if key == "kv" and t0 is not None and cfg.sliding_window is None:
+        sub = {"k": sub["k"][:, :, t0:t1], "v": sub["v"][:, :, t0:t1]}
+    return sub
+
+
+def import_kv_window(cfg: ModelConfig, cache: Params, slot: int,
+                     layer0: int, shards, t0: int = 0) -> Params:
+    """Install a contiguous ascending run of attention-KV layer shards
+    (layers ``layer0, layer0+1, ...``, all covering the same token
+    window starting at ``t0``) in ONE cache update.
+
+    A streamed admission receives one shard per layer per chunk;
+    installing each individually rebuilds the whole batched cache
+    O(layers x chunks) times, so the consumer buffers a window's run
+    and flushes it here — one functional update per chunk instead of
+    one per (layer, chunk).
+    """
+    ks = jnp.concatenate([s["k"] for s in shards], axis=0)
+    vs = jnp.concatenate([s["v"] for s in shards], axis=0)
+    L, T = ks.shape[0], ks.shape[2]
+    new = dict(cache)
+    new["kv"] = {
+        "k": cache["kv"]["k"].at[
+            layer0:layer0 + L, slot:slot + 1, t0:t0 + T].set(
+            ks.astype(cache["kv"]["k"].dtype)),
+        "v": cache["kv"]["v"].at[
+            layer0:layer0 + L, slot:slot + 1, t0:t0 + T].set(
+            vs.astype(cache["kv"]["v"].dtype)),
+    }
+    return new
+
+
+def import_kv_shard(cfg: ModelConfig, cache: Params, slot: int,
+                    key: str, layer: int, shard: Params,
+                    t0: int = 0) -> Params:
+    """Install one exported layer shard into ``slot`` of a batched
+    cache.  Inverse of :func:`export_kv_shard`; installing all shards
+    of a request reproduces :func:`import_kv` of its whole export."""
+    new = dict(cache)
+    if key == "kv" and cfg.sliding_window is None:
+        T = shard["k"].shape[2]
+        new["kv"] = {
+            "k": cache["kv"]["k"].at[
+                layer:layer + 1, slot:slot + 1, t0:t0 + T].set(
+                shard["k"].astype(cache["kv"]["k"].dtype)),
+            "v": cache["kv"]["v"].at[
+                layer:layer + 1, slot:slot + 1, t0:t0 + T].set(
+                shard["v"].astype(cache["kv"]["v"].dtype)),
+        }
+    else:
+        new[key] = jax.tree_util.tree_map(
+            lambda full, s: full.at[layer:layer + 1, slot:slot + 1].set(
+                s.astype(full.dtype)), cache[key], shard)
+    return new
 
 
 def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,

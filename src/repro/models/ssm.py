@@ -68,9 +68,10 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     return (out + b.astype(jnp.float32)).astype(x.dtype), new_state
 
 
-def _ssd_chunk_scan(xh, B_, C_, a_log, chunk: int):
+def _ssd_chunk_scan(xh, B_, C_, a_log, chunk: int, h0=None):
     """Chunked SSD.  xh: (B, S, H, P) dt-scaled inputs; B_/C_: (B, S, N);
-    a_log: (B, S, H) log decay (negative).  Returns (y, final_state)."""
+    a_log: (B, S, H) log decay (negative); h0: (B, H, N, P) incoming
+    state (zeros when starting fresh).  Returns (y, final_state)."""
     Bb, S, H, P = xh.shape
     N = B_.shape[-1]
     assert S % chunk == 0, (S, chunk)
@@ -111,7 +112,8 @@ def _ssd_chunk_scan(xh, B_, C_, a_log, chunk: int):
         h_new = jnp.exp(cm[:, -1])[:, :, None, None] * h + st
         return h_new, y_intra + y_state
 
-    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    h0 = (jnp.zeros((Bb, H, N, P), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
     hT, ys = jax.lax.scan(body, h0, jnp.arange(nC))
     y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
     return y, hT
@@ -158,7 +160,11 @@ def mamba2(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
             Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
             Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
             a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
-        y, hT = _ssd_chunk_scan(xh_dt, Bv, Cv, a_log, chunk)
+        # carry the incoming SSM state (chunked prefill continues an
+        # earlier chunk's state; a fresh prefill passes zeros)
+        y, hT = _ssd_chunk_scan(xh_dt, Bv, Cv, a_log, chunk,
+                                h0=None if state is None
+                                else state["ssm"])
         y = y[:, :S]
         new_state = ({"ssm": hT, "conv": new_conv}
                      if state is not None else None)

@@ -208,11 +208,14 @@ class TesseraCluster:
         return simulate_cluster(self.build_replicas(), creqs, router)
 
     def simulate_pd(self, trace: Sequence[WorkloadRequest],
-                    router) -> ClusterResult:
+                    router, kv_chunks: int = 1) -> ClusterResult:
         """Phase-split replay: ``router`` may return ``(prefill_idx,
         decode_idx, admit_at)`` (see router.PDRouter); KV-transfer time
-        between groups comes from this cluster's ``interconnect``."""
+        between groups comes from this cluster's ``interconnect``.
+        ``kv_chunks > 1`` streams each handoff as that many chunks
+        overlapped with the remaining prefill compute (see
+        simulator.simulate_cluster_pd)."""
         creqs = [self.to_cluster_request(r)
                  for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
         return simulate_cluster_pd(self.build_replicas(), creqs, router,
-                                   self.interconnect)
+                                   self.interconnect, kv_chunks)

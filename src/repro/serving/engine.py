@@ -26,7 +26,18 @@ vLLM-shaped control plane on a JAX data plane:
     on a second engine starts a decode_only session from the imported
     state (greedy decode is bit-identical to a single-engine run) —
     the real-engine analogue of the cluster simulator's KV-transfer
-    edge.
+    edge,
+  * PIPELINED handoff: ``prefill_handoff_stream`` processes the prompt
+    in ``prefill_chunk``-sized chunks and yields (layer, chunk) KV
+    shards as soon as they are computed, so the fabric transfer
+    overlaps the remaining prefill compute instead of starting only
+    after the whole prompt finishes; ``admit_handoff_stream`` installs
+    the shards eagerly and starts decoding the moment the last shard
+    lands (still bit-identical to the serial path),
+  * chunked COLOCATED admission: with ``prefill_chunk`` set, a long
+    admitted prompt no longer freezes the live decode slots for its
+    whole prefill — decode steps are interleaved between prefill
+    chunks.
 
 Accounting note: completion times are observed at sync boundaries, so a
 request's ``finished`` stamp can be up to ``sync_every - 1`` decode steps
@@ -97,7 +108,8 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  decode_fn: Optional[Callable] = None,
                  prefill_fn: Optional[Callable] = None,
-                 sync_every: int = 8):
+                 sync_every: int = 8,
+                 prefill_chunk: Optional[int] = None):
         assert cfg.family in ("dense", "moe", "ssm", "hybrid"), \
             "engine serves decoder-only families"
         assert sync_every >= 1
@@ -108,6 +120,8 @@ class ServingEngine:
         self.eos_id = eos_id
         self.temperature = temperature
         self.sync_every = sync_every
+        assert prefill_chunk is None or prefill_chunk >= 1
+        self.prefill_chunk = prefill_chunk
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
 
@@ -171,6 +185,11 @@ class ServingEngine:
             self._prefill = jax.jit(
                 lambda c, t, lp: M.prefill(params, cfg, t, c,
                                            last_pos=lp))
+            # one chunk of an incremental prefill (offset is a traced
+            # scalar, so every full-size chunk shares one compile)
+            self._prefill_at = jax.jit(
+                lambda c, t, off, lp: M.prefill(params, cfg, t, c,
+                                                offset=off, last_pos=lp))
 
     # ------------------------------------------------------------------ #
     def _now(self, now: Optional[float]) -> float:
@@ -272,9 +291,16 @@ class ServingEngine:
         else:
             last = np.zeros(Gp, np.int32)
             last[:G] = np.asarray(lens) - 1
-            logits, cache_g = self._prefill(
-                cache_g, jnp.asarray(toks, jnp.int32),
-                jnp.asarray(last, jnp.int32))
+            if self._can_chunk(S):
+                # chunked prefill: live decode slots keep streaming
+                # between chunks instead of stalling for the whole
+                # prompt (the colocated head-of-line fix)
+                logits, cache_g = self._prefill_chunks(
+                    cache_g, toks, last, now, interleave=True)
+            else:
+                logits, cache_g = self._prefill(
+                    cache_g, jnp.asarray(toks, jnp.int32),
+                    jnp.asarray(last, jnp.int32))
         self._write_slots(slots_, cache_g, G)
         # honest TTFT: the first token exists only once logits are real
         jax.block_until_ready(logits)
@@ -308,6 +334,41 @@ class ServingEngine:
             else:
                 # completes at prefill (budget spent or EOS sampled)
                 self._finalize(req, t_ready)
+
+    # ------------------------------------------------------------------ #
+    # Chunked prefill: incremental cache fill with decode interleaving
+    # ------------------------------------------------------------------ #
+    def _can_chunk(self, S: int) -> bool:
+        """Chunked prefill needs the built-in prefill path and a
+        non-ring cache (SWA slot layout wraps at the window), and only
+        pays off when the prompt spans more than one chunk."""
+        return (self.prefill_chunk is not None
+                and self._prefill_custom is None
+                and self.cfg.sliding_window is None
+                and S > self.prefill_chunk)
+
+    def _prefill_chunks(self, cache_g, toks: np.ndarray,
+                        last: np.ndarray, now: Optional[float] = None,
+                        interleave: bool = False):
+        """Drive ``prefill(offset=...)`` over prefill_chunk-sized
+        slices of the padded admission batch.  With ``interleave`` one
+        decode step runs between chunks, so a long admitted prompt no
+        longer freezes the live decode slots for its whole prefill.
+        Returns (last-position logits, filled cache) — identical to
+        one whole-prompt prefill."""
+        S = toks.shape[1]
+        logits = None
+        for _, t1, logits, cache_g in M.iter_prefill_chunks(
+                self.params, self.cfg, toks, cache_g,
+                chunk_size=self.prefill_chunk, last_pos=last,
+                prefill_call=self._chunk_call):
+            if interleave and t1 < S and self._any_active():
+                self.step(self._now(now))
+        return logits, cache_g
+
+    def _chunk_call(self, cache, toks, off, rel):
+        return self._prefill_at(cache, jnp.asarray(toks, jnp.int32),
+                                off, jnp.asarray(rel, jnp.int32))
 
     # ------------------------------------------------------------------ #
     # Prefill/decode disaggregation: two-engine state handoff
@@ -372,6 +433,110 @@ class ServingEngine:
                 "pos": plen, "budget": req.max_new_tokens - 1,
                 "kv_bytes": M.kv_state_bytes(state), "done": False}
 
+    def prefill_handoff_stream(self, req: Request,
+                               now: Optional[float] = None,
+                               chunk_size: Optional[int] = None):
+        """Pipelined handoff: a generator that prefills the prompt in
+        chunks and yields (layer, chunk) KV shards the moment they are
+        computed; the FINAL item is the header dict (the
+        :meth:`prefill_handoff` schema with ``state=None`` — the state
+        already went out as shards).
+
+        A consumer that installs shards as they arrive
+        (:meth:`admit_handoff_stream`, or a fabric DMA on real
+        hardware) overlaps the KV transfer with the remaining prefill
+        compute — the transfer no longer lands 1:1 in TTFT, which is
+        the engine-side analogue of the simulator's per-chunk
+        KV-transfer events.  Recurrent state (ssm / hybrid mamba) only
+        means anything after the last token, so it streams per layer
+        after the final chunk; ring-buffer SWA caches fall back to
+        whole-prompt prefill and stream per layer only.  Greedy decode
+        from the streamed shards is bit-identical to the serial path.
+
+        Unlike the serial handoff, a request that finishes AT prefill
+        (EOS / budget 1) has already streamed its shards by the time
+        that is known; the ``done`` header tells the consumer to
+        release the reserved slot (the honest cost of eager
+        streaming).
+        """
+        assert len(req.prompt) < self.max_len, "prompt exceeds max_len"
+        plen = len(req.prompt)
+        C = chunk_size or self.prefill_chunk or plen
+        cache1 = M.init_cache(self.cfg, 1, self.max_len)
+        sent = 0
+
+        def shard_item(key, layer, t0=None, t1=None):
+            shard = M.export_kv_shard(self.cfg, cache1, 0, key, layer,
+                                      t0, t1)
+            return {"rid": req.rid, "key": key, "layer": layer,
+                    "t0": t0, "t1": t1, "state": shard,
+                    "bytes": M.kv_state_bytes(shard)}
+
+        if (self._prefill_custom is None
+                and self.cfg.sliding_window is None and C < plen):
+            toks = np.asarray(req.prompt, np.int32).reshape(1, plen)
+            n_kv = M.cache_layer_counts(cache1).get("kv", 0)
+            logits = None
+            for t0, t1, logits, cache1 in M.iter_prefill_chunks(
+                    self.params, self.cfg, toks, cache1, chunk_size=C,
+                    prefill_call=self._chunk_call):
+                # this chunk's K/V planes are final for every layer the
+                # moment the chunk completes: stream them now, while
+                # later chunks still compute
+                for layer in range(n_kv):
+                    item = shard_item("kv", layer, t0, t1)
+                    sent += item["bytes"]
+                    yield item
+            stream_kv_tail = False
+        else:
+            # serial fallback (ring-buffer SWA / injected prefill /
+            # single-chunk prompt): same bucketing as prefill_handoff
+            if self.cfg.family in _PAD_SAFE_FAMILIES:
+                S = min(-(-plen // 8) * 8, self.max_len - 1)
+            else:
+                S = plen
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :plen] = req.prompt
+            if self._prefill_custom is not None:
+                logits, cache1 = self._prefill_custom(
+                    self.params, cache1,
+                    jnp.asarray(toks[:, :plen], jnp.int32))
+            else:
+                logits, cache1 = self._prefill(
+                    cache1, jnp.asarray(toks, jnp.int32),
+                    jnp.asarray([plen - 1], jnp.int32))
+            stream_kv_tail = True
+
+        for key, L in M.cache_layer_counts(cache1).items():
+            if key == "kv" and not stream_kv_tail:
+                continue        # already streamed per chunk above
+            for layer in range(L):
+                if key == "kv" and self.cfg.sliding_window is None:
+                    item = shard_item(key, layer, 0, plen)
+                else:           # recurrent state / whole SWA ring
+                    item = shard_item(key, layer)
+                sent += item["bytes"]
+                yield item
+
+        jax.block_until_ready(logits)
+        t_ready = self._now(now)
+        first = int(self._sample_host(logits)[0])
+        self.stats.prefill_batches += 1
+        req.output.append(first)
+        live = req.max_new_tokens > 1 and not (
+            self.eos_id is not None and first == self.eos_id)
+        if not live:            # done at prefill: producer finalizes
+            req.ttft = t_ready
+            self._finalize(req, t_ready)
+            yield {"rid": req.rid, "header": True, "state": None,
+                   "last_tok": first, "pos": plen, "budget": 0,
+                   "kv_bytes": sent, "done": True}
+            return
+        yield {"rid": req.rid, "header": True, "state": None,
+               "last_tok": first, "pos": plen,
+               "budget": req.max_new_tokens - 1,
+               "kv_bytes": sent, "done": False}
+
     def admit_handoff(self, req: Request, handoff: Dict[str, Any],
                       now: Optional[float] = None) -> bool:
         """decode_only admission: start a session from imported KV /
@@ -387,7 +552,10 @@ class ServingEngine:
                 "there is no decode to admit")
         assert handoff["pos"] < self.max_len, \
             "imported state exceeds this engine's max_len"
-        self.sync(now if now is not None else 0.0)
+        # route through sync's own _now resolution: substituting 0.0
+        # here would stamp wall-clock-mode completions of the settled
+        # window at t=0 instead of the engine clock
+        self.sync(now)
         free = [s for s in range(self.slots) if self.active[s] is None]
         if not free:
             return False
@@ -400,6 +568,90 @@ class ServingEngine:
         self.budget = self.budget.at[slot].set(handoff["budget"])
         self.active_mask = self.active_mask.at[slot].set(True)
         self.active[slot] = req
+        self._recompute_remaining()
+        return True
+
+    def admit_handoff_stream(self, req: Request, shards,
+                             now: Optional[float] = None) -> bool:
+        """Consume a :meth:`prefill_handoff_stream`: reserve a slot,
+        install every (layer, chunk) shard eagerly as it arrives, and
+        start decoding the moment the header (the last item) lands.
+
+        Pulling from the generator is what drives the producer's next
+        prefill chunk, so installation genuinely interleaves with the
+        remaining prefill compute.  Returns False — without consuming
+        anything — when no slot is free (retry after draining);
+        returns True once the stream is fully consumed, whether a
+        decode session started or the request already finished at
+        prefill on the producer (the ``done`` header releases the
+        reserved slot, so no retry can ever be needed).  TTFT is
+        stamped when the header lands: the first token streams only
+        once the full state is resident, the same accounting as the
+        simulator's overlapped KV-arrival time.
+        """
+        # validate BEFORE reserving or consuming anything: a failure
+        # mid-install would otherwise leak the reserved slot
+        assert len(req.prompt) < self.max_len, \
+            "handoff prompt exceeds this engine's max_len"
+        self.sync(now)
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free:
+            return False
+        slot = free[0]
+        # host-side reservation only: active_mask stays False, so the
+        # decode loop masks the slot until the header activates it
+        self.active[slot] = req
+        header = None
+        # same-window attention-KV shards coalesce into ONE cache
+        # update per chunk (per-shard installs rebuild the whole
+        # batched cache O(layers x chunks) times); stale leftovers in
+        # a released slot are harmless — causal masking hides them and
+        # the next admission overwrites them
+        pend: List = []
+        pend_win = None
+
+        def flush():
+            nonlocal pend, pend_win
+            if pend:
+                self.cache = M.import_kv_window(
+                    self.cfg, self.cache, slot, pend[0][0],
+                    [s for _, s in pend], pend_win[0])
+                pend, pend_win = [], None
+
+        try:
+            for item in shards:
+                if item.get("header"):
+                    header = item
+                    break
+                win = (item.get("t0") or 0, item.get("t1"))
+                if (item["key"] == "kv"
+                        and self.cfg.sliding_window is None):
+                    if pend and (pend_win != win or
+                                 item["layer"] != pend[0][0] + len(pend)):
+                        flush()
+                    pend.append((item["layer"], item["state"]))
+                    pend_win = pend_win or win
+                    continue
+                flush()
+                self.cache = M.import_kv_shard(
+                    self.cfg, self.cache, slot, item["key"],
+                    item["layer"], item["state"], win[0])
+            flush()
+            assert header is not None, \
+                "handoff stream ended without header"
+        except BaseException:
+            self.active[slot] = None    # release the reserved slot
+            raise
+        if header["done"]:          # finished at prefill: free the slot
+            self.active[slot] = None
+            return True
+        assert header["pos"] < self.max_len, \
+            "imported state exceeds this engine's max_len"
+        req.ttft = self._now(now)
+        self.pos = self.pos.at[slot].set(header["pos"])
+        self.last_tok = self.last_tok.at[slot].set(header["last_tok"])
+        self.budget = self.budget.at[slot].set(header["budget"])
+        self.active_mask = self.active_mask.at[slot].set(True)
         self._recompute_remaining()
         return True
 

@@ -168,7 +168,18 @@ class PDRouter(Router):
 
     Routing within each pool is JSED restricted to the pool's members;
     with ``slo_shed`` the request is shed when the expected phase-split
-    completion delay already exceeds its SLO.
+    completion delay already exceeds its SLO (the expected TTFT
+    includes the KV-transfer tail when an ``interconnect`` is given —
+    the full serial transfer, or only the last chunk's tail under
+    ``kv_chunks``-way overlapped streaming, matching the earlier
+    effective KV-arrival the DES produces).
+
+    Decode-session affinity (``session_affinity``): a follow-up turn
+    of a multi-turn session runs BOTH phases on the decode group that
+    already holds the session's resident KV/recurrent state — its
+    prefill reuses the resident state in place instead of
+    re-transferring across the fabric.  Avoided transfers are counted
+    in ``transfers_avoided`` (surfaced per run in ``ClusterResult``).
     """
 
     name = "pd_split"
@@ -177,11 +188,24 @@ class PDRouter(Router):
                  prefill_pool: Optional[Sequence[int]] = None,
                  decode_pool: Optional[Sequence[int]] = None,
                  max_kv_lag: float = 0.25,
-                 slo_shed: bool = False):
+                 slo_shed: bool = False,
+                 session_affinity: bool = False,
+                 affinity_break: float = float("inf"),
+                 interconnect=None,
+                 kv_chunks: int = 1):
         assert 0.0 < prefill_frac < 1.0 or prefill_pool is not None
         self.prefill_frac = prefill_frac
         self.max_kv_lag = max_kv_lag
         self.slo_shed = slo_shed
+        self.session_affinity = session_affinity
+        # re-split a follow-up when staying home costs this many more
+        # backlog seconds than the best decode candidate (inf = always
+        # stay; the JSEDRouter affinity_break semantics)
+        self.affinity_break = affinity_break
+        self.interconnect = interconnect
+        self.kv_chunks = max(int(kv_chunks), 1)
+        self.transfers_avoided = 0
+        self._session_decode: Dict[int, int] = {}
         self._pools: Optional[Tuple[List[int], List[int]]] = None
         if prefill_pool is not None or decode_pool is not None:
             assert prefill_pool and decode_pool, \
@@ -220,11 +244,52 @@ class PDRouter(Router):
             replicas[i].backlog(now)
             + replicas[i].predicted_phase_service(req, phase), i))
 
+    def _transfer_tail(self, req, p: int, d: int) -> float:
+        """Expected KV-transfer seconds landing in TTFT.  Serial: the
+        whole edge.  Overlapped streaming: earlier chunks hide behind
+        the remaining prefill compute, so only the last chunk's
+        transfer outlives it (the compute-bound best case — the DES
+        can only arrive at or before the serial edge, see
+        simulator._stream_kv)."""
+        ic = self.interconnect
+        if ic is None:
+            return 0.0
+        serial = ic.transfer_time(req.kv_bytes, p, d)
+        if self.kv_chunks <= 1 or serial <= 0.0:
+            return serial
+        return min(serial, ic.base_latency
+                   + (req.kv_bytes / self.kv_chunks) / ic.bandwidth(p, d))
+
     # -------------------------------------------------------------- #
     def route(self, req, replicas, now):
         """Returns (prefill_idx, decode_idx, admit_at) — or -1 (shed),
         or a plain index when the pools degenerate to one group."""
         pre_pool, dec_pool = self.pools(replicas)
+        if self.session_affinity and req.session is not None:
+            home = self._session_decode.get(req.session)
+            if home is not None:
+                stay = replicas[home].backlog(now)
+                best = min(replicas[i].backlog(now) for i in dec_pool)
+                if stay - best <= self.affinity_break:
+                    # follow-up turn: the decode group already holds
+                    # this session's resident state — prefill reuses it
+                    # in place, no cross-fabric re-transfer.  Admission
+                    # control still applies: a follow-up that cannot
+                    # meet its SLO on the home group is shed like any
+                    # other request, not smuggled past the check.
+                    if self.slo_shed:
+                        rep = replicas[home]
+                        t_first = (stay + rep.predicted_phase_service(
+                            req, "prefill"))
+                        total = t_first + rep.predicted_phase_service(
+                            req, "decode")
+                        if ((req.slo is not None and total > req.slo)
+                                or (req.slo_ttft is not None
+                                    and t_first > req.slo_ttft)):
+                            return -1
+                    self.transfers_avoided += 1
+                    return home
+                del self._session_decode[req.session]   # migrate
         p = self._best(pre_pool, req, replicas, now, "prefill")
         d = self._best(dec_pool, req, replicas, now, "decode")
         if p == d:
@@ -236,13 +301,16 @@ class PDRouter(Router):
         if self.slo_shed:
             expect_ttft = (lag + replicas[p].backlog(now)
                            + replicas[p].predicted_phase_service(
-                               req, "prefill"))
+                               req, "prefill")
+                           + self._transfer_tail(req, p, d))
             expect = expect_ttft + replicas[d].predicted_phase_service(
                 req, "decode")
             if req.slo is not None and expect > req.slo:
                 return -1
             if req.slo_ttft is not None and expect_ttft > req.slo_ttft:
                 return -1
+        if self.session_affinity and req.session is not None:
+            self._session_decode[req.session] = d
         return p, d, now + lag
 
 

@@ -19,21 +19,18 @@ quantity (throughput req/s, cost-eff req/$, speedup ratios) in
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 from pathlib import Path
 from typing import List, Sequence, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-from common import request_graph
+from common import (Row, bench_parser, print_rows, request_graph,
+                    write_bench_json)
 from repro.core.monitor import MonitorConfig
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import JSEDRouter, RoundRobinRouter
 from repro.serving.workload import assign_slos, make_trace
-
-Row = Tuple[str, float, str]
 
 ARCH = "llama3_8b"
 LAYERS = 2                      # traced layers (costs are per-layer exact)
@@ -110,23 +107,13 @@ def cluster_scaling(quick: bool = False) -> List[Row]:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="CI-sized sweep (fewer replicas/requests)")
-    ap.add_argument("--out", default=None, metavar="JSON",
-                    help="write machine-readable results")
-    args = ap.parse_args()
+    args = bench_parser("cluster throughput/cost-eff scaling").parse_args()
     rows = cluster_scaling(args.quick)
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.2f},{derived}")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump({"bench": "cluster_scaling", "quick": args.quick,
-                       "rows": [{"name": n, "us_per_call": us,
-                                 "derived": d} for n, us, d in rows]},
-                      f, indent=2)
-        print(f"# wrote {args.out}", file=sys.stderr)
+    print_rows(rows)
+    write_bench_json(args.out, {
+        "bench": "cluster_scaling", "quick": args.quick,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows]})
 
 
 if __name__ == "__main__":

@@ -14,8 +14,11 @@ scaled by ``n_out`` for the planner; the simulator replays decode stages
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +28,43 @@ from repro.core import analyzer
 from repro.core.costmodel import CATALOG
 from repro.core.graph import KernelGraph, KernelNode
 from repro.models import model as M
+
+# --------------------------------------------------------------------- #
+# Shared CLI / report boilerplate (the repo CSV contract:
+# ``name,us_per_call,derived`` — mean latency us in the middle column,
+# the headline quantity in ``derived``).
+# --------------------------------------------------------------------- #
+Row = Tuple[str, float, str]
+
+
+def bench_parser(description: str = "",
+                 check_help: Optional[str] = None
+                 ) -> argparse.ArgumentParser:
+    """The flags every cluster-model benchmark shares: ``--quick``
+    (CI-sized sweep), ``--out JSON`` (machine-readable results) and —
+    when ``check_help`` is given — ``--check`` (the acceptance gate)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sweep (fewer requests, less anneal)")
+    ap.add_argument("--out", default=None, metavar="JSON",
+                    help="write machine-readable results")
+    if check_help is not None:
+        ap.add_argument("--check", action="store_true", help=check_help)
+    return ap
+
+
+def print_rows(rows: Sequence[Row]) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+def write_bench_json(path: Optional[str], payload: Dict) -> None:
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {path}", file=sys.stderr)
 
 # Paper §V-A workloads mapped onto this repo's model zoo.  Stable
 # Diffusion 3.5 is outside the assigned architecture pool — noted as

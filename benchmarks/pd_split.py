@@ -52,7 +52,6 @@ mean TTFT.
 """
 from __future__ import annotations
 
-import argparse
 import json
 import sys
 from pathlib import Path
@@ -60,15 +59,14 @@ from typing import Dict, List, Sequence, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-from common import request_graph
+from common import (Row, bench_parser, print_rows, request_graph,
+                    write_bench_json)
 import repro.configs as configs
 from repro.core.monitor import MonitorConfig
 from repro.core.simulator import Interconnect
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import JSEDRouter, PDRouter
 from repro.serving.workload import assign_slos, make_trace
-
-Row = Tuple[str, float, str]
 
 ARCH = "llama3_8b"
 LAYERS = 2                      # traced layers (costs are per-layer exact)
@@ -230,27 +228,23 @@ def run_mix(mix_name: str, mix, quick: bool, overlap: bool = False
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="CI-sized sweep (fewer requests, less anneal)")
+    ap = bench_parser(
+        "phase-split vs colocated serving across P/D ratios",
+        check_help="fail unless phase-split beats colocated on a "
+                   "heterogeneous mix (the acceptance gate); with "
+                   "--overlap also gate transfer-overlap wins")
     ap.add_argument("--overlap", action="store_true",
                     help="also sweep chunked KV streaming (kv_chunks) "
                          "and the session-affinity variant")
-    ap.add_argument("--out", default=None, metavar="JSON",
-                    help="write machine-readable results")
-    ap.add_argument("--check", action="store_true",
-                    help="fail unless phase-split beats colocated on a "
-                         "heterogeneous mix (the acceptance gate); with "
-                         "--overlap also gate transfer-overlap wins")
     args = ap.parse_args()
 
-    print("name,us_per_call,derived")
+    all_rows: List[Row] = []
     summaries = []
     for mix_name, mix in MIXES.items():
         rows, summary = run_mix(mix_name, mix, args.quick, args.overlap)
         summaries.append(summary)
-        for name, us, derived in rows:
-            print(f"{name},{us:.2f},{derived}")
+        all_rows += rows
+    print_rows(all_rows)
 
     hetero = [s for s in summaries if s["mix"].startswith("hetero")]
     wins = [s for s in hetero
@@ -273,12 +267,9 @@ def main() -> None:
         gate["overlap_recovered_hetero"] = recovered
         gate["passed"] = bool(gate["passed"] and not regress
                               and recovered)
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump({"bench": "pd_split", "quick": args.quick,
-                       "overlap": args.overlap,
-                       "mixes": summaries, "gate": gate}, f, indent=2)
-        print(f"# wrote {args.out}", file=sys.stderr)
+    write_bench_json(args.out, {"bench": "pd_split", "quick": args.quick,
+                                "overlap": args.overlap,
+                                "mixes": summaries, "gate": gate})
     if args.check:
         assert wins, (
             "phase-split failed to beat colocated routing on every "

@@ -110,14 +110,17 @@ print(f"monitor: policy={monitor.policy} switches={monitor.switches}")
 print("sample output tokens:", reqs[0].output)
 
 # --- phase-split: two-engine prefill→transfer→decode handoff ---------- #
-# The real-engine analogue of the cluster simulator's KV-transfer edge:
-# engine P runs ONLY prefills (the compute-rich pool's job), exports
-# each request's KV/recurrent state, and engine D starts decode_only
-# sessions from the imported state.  Greedy decode must be bit-identical
-# to a single engine that never split the request.
+# The real-engine analogue of the cluster simulator's KV-transfer edge,
+# launched from the DECLARATIVE deployment spec: engine P runs ONLY
+# prefills (the compute-rich pool's job), exports each request's
+# KV/recurrent state, and engine D starts decode_only sessions from the
+# imported state.  Greedy decode must be bit-identical to a single
+# engine that never split the request.  The same spec object could be
+# .simulate()d on the cluster DES instead — one description, two
+# backends.
 print("\n--- phase-split handoff (prefill engine -> decode engine) ---")
 from repro.core.simulator import Interconnect          # noqa: E402
-from repro.serving.engine import Request               # noqa: E402
+from repro.serving.spec import DeploymentSpec          # noqa: E402
 
 ic = Interconnect(default_bw=100e9)
 pd_trace = poisson_trace(rate=40.0, num_requests=6, seed=3)
@@ -130,69 +133,40 @@ split = requests_from_trace(pd_trace, cfg.vocab_size,
 ref_engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
 ref_engine.run(single)
 
-prefill_engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
-decode_engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
-                              sync_every=4)
-wire_bytes = 0
+ENGINE_KW = {"slots": SLOTS, "max_len": MAX_LEN, "sync_every": 4}
+pd_spec = DeploymentSpec(groups=[["tpu-v5p"], ["tpu-v5e"]], pd=True,
+                         arch="gpt_oss_20b", engine=ENGINE_KW)
 t0 = time.perf_counter()
-handoffs = []
-for req in split:
-    h = prefill_engine.prefill_handoff(req, time.perf_counter() - t0)
-    if not h["done"]:
-        # "transfer": the state pytree crosses engines here; on real
-        # hardware this is a fabric RDMA, modeled by the interconnect
-        wire_bytes += h["kv_bytes"]
-        handoffs.append((req, h))
-while handoffs or decode_engine._any_active():
-    while handoffs and decode_engine.admit_handoff(
-            handoffs[0][0], handoffs[0][1], time.perf_counter() - t0):
-        handoffs.pop(0)
-    decode_engine.step(time.perf_counter() - t0)
-decode_engine.sync(time.perf_counter() - t0)
+out = pd_spec.compile().launch(cfg, params).run(split)
 wall = time.perf_counter() - t0
 
 match = all(a.output == b.output for a, b in zip(single, split))
+wire_bytes = out["wire_bytes"]
 print(f"requests={len(split)}  KV wire bytes={wire_bytes}  "
       f"modeled transfer={ic.transfer_time(wire_bytes, 0, 1) * 1e6:.1f}us"
       f"  wall={wall * 1e3:.1f}ms")
-print(f"decode-only engine: {decode_engine.stats.summary()}")
+print(f"decode-only engine: {out['engine']}")
 print("bit-identical to single engine:", match)
 assert match, "phase-split decode diverged from the single-engine run"
 
 # --- overlapped handoff: (layer, chunk) shards stream during prefill -- #
+# kv_chunks > 1 in the spec launches the STREAMED pairing:
 # prefill_handoff_stream yields each layer's KV for a chunk the moment
 # the chunk's prefill completes; admit_handoff_stream installs shards
 # eagerly and starts decoding when the last one lands.  On real
 # hardware the shard transfers ride the fabric concurrently with the
 # remaining prefill compute, so only the transfer tail lands in TTFT
-# (the engine analogue of simulate_cluster_pd(kv_chunks=n)).
+# (the engine analogue of simulate(kv_chunks=n) on the DES backend).
 print("\n--- overlapped handoff (streamed (layer, chunk) shards) ---")
 streamed = requests_from_trace(pd_trace, cfg.vocab_size,
                                max_prompt=PROMPT_CAP, max_new=NEW_CAP,
                                time_scale=0.0)
-pre_s = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
-                      prefill_chunk=4)
-dec_s = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
-                      sync_every=4)
-n_shards = shard_bytes = 0
-t0 = time.perf_counter()
-for req in streamed:
-    def counted(gen):
-        global n_shards, shard_bytes
-        for item in gen:
-            if not item.get("header"):
-                n_shards += 1
-                shard_bytes += item["bytes"]
-            yield item
-    while not dec_s.admit_handoff_stream(
-            req, counted(pre_s.prefill_handoff_stream(
-                req, time.perf_counter() - t0)),
-            time.perf_counter() - t0):
-        dec_s.step(time.perf_counter() - t0)    # drain a slot, retry
-while dec_s._any_active():
-    dec_s.step(time.perf_counter() - t0)
-dec_s.sync(time.perf_counter() - t0)
+ov_spec = DeploymentSpec(groups=[["tpu-v5p"], ["tpu-v5e"]], pd=True,
+                         kv_chunks=MAX_LEN // 4,   # 4-token chunks
+                         arch="gpt_oss_20b", engine=ENGINE_KW)
+out_s = ov_spec.compile().launch(cfg, params).run(streamed)
 match_s = all(a.output == b.output for a, b in zip(single, streamed))
+n_shards, shard_bytes = out_s["shards"], out_s["wire_bytes"]
 per_chunk = ic.transfer_time(shard_bytes / max(n_shards, 1), 0, 1)
 print(f"requests={len(streamed)}  shards={n_shards}  "
       f"bytes={shard_bytes}  modeled tail/shard={per_chunk * 1e6:.1f}us")

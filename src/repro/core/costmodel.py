@@ -81,6 +81,102 @@ class DeviceSpec:
         return CalibratedDevice(self, dict(measured))
 
 
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured wall/model service-time ratios for one serving host.
+
+    Fitted from the machine-readable ``CALIBRATION {json}`` line that
+    ``examples/serve_pipeline.py`` emits (modeled vs wall-clock TTFT /
+    TPOT for the same plan): the TTFT ratio calibrates prefill-phase
+    kernels, the TPOT ratio decode-phase kernels, and their geometric
+    mean everything untagged.  One factor per phase is all a single
+    end-to-end measurement can support — per-kernel measured profiles
+    go through :meth:`DeviceSpec.calibrate` instead.
+    """
+    prefill_scale: float = 1.0      # wall TTFT / modeled TTFT
+    decode_scale: float = 1.0       # wall TPOT / modeled TPOT
+
+    def __post_init__(self):
+        if self.prefill_scale <= 0.0 or self.decode_scale <= 0.0:
+            raise ValueError("calibration scales must be positive, got "
+                             f"{self.prefill_scale}/{self.decode_scale}")
+
+    @property
+    def scale(self) -> float:
+        """Phase-agnostic factor (geometric mean of the two ratios)."""
+        return math.sqrt(self.prefill_scale * self.decode_scale)
+
+    def apply(self, dev) -> "ScaledDevice":
+        return ScaledDevice(dev, self)
+
+    def apply_all(self, devices) -> "list[ScaledDevice]":
+        return [self.apply(d) for d in devices]
+
+
+def calibrate(calibration_json) -> Calibration:
+    """Fit a :class:`Calibration` from a ``CALIBRATION`` payload.
+
+    Accepts the parsed dict, a JSON string, or the raw log line (the
+    leading ``CALIBRATION `` tag is stripped).  Recognized keys are the
+    ones ``examples/serve_pipeline.py`` emits —
+    ``ttft_wall_over_model`` / ``tpot_wall_over_model`` — with
+    ``prefill_scale`` / ``decode_scale`` accepted as spelled-out
+    aliases (the form ``DeploymentSpec.calibration`` round-trips).
+    """
+    import json
+    if isinstance(calibration_json, (str, bytes)):
+        s = calibration_json.strip()
+        if isinstance(s, bytes):
+            s = s.decode()
+        if s.startswith("CALIBRATION"):
+            s = s[len("CALIBRATION"):].strip()
+        obj = json.loads(s)
+    else:
+        obj = dict(calibration_json)
+    if not isinstance(obj, dict):
+        raise ValueError(f"calibration payload must be an object, "
+                         f"got {type(obj).__name__}")
+    pre = obj.get("ttft_wall_over_model", obj.get("prefill_scale"))
+    dec = obj.get("tpot_wall_over_model", obj.get("decode_scale"))
+    if pre is None and dec is None:
+        raise ValueError(
+            "calibration payload carries neither ttft_wall_over_model "
+            f"nor tpot_wall_over_model: {sorted(obj)}")
+    return Calibration(prefill_scale=float(pre if pre is not None else 1.0),
+                       decode_scale=float(dec if dec is not None else 1.0))
+
+
+class ScaledDevice:
+    """DeviceSpec whose analytic kernel times are scaled by a measured
+    :class:`Calibration` — phase-aware: prefill kernels by the TTFT
+    ratio, decode kernels by the TPOT ratio, untagged kernels by the
+    geometric mean.  Transfer times are NOT scaled (the calibration
+    line measures compute service, not the fabric).  The derived
+    ``name`` keeps calibrated placements out of the uncalibrated
+    plan-cache slot (the planner keys plans by device names).
+    """
+
+    def __init__(self, spec, cal: Calibration):
+        self.spec = spec
+        self.cal = cal
+        self.name = (f"{spec.name}*cal{cal.prefill_scale:.4g}"
+                     f"/{cal.decode_scale:.4g}")
+
+    def __getattr__(self, item):
+        return getattr(self.spec, item)
+
+    def kernel_time(self, node: KernelNode) -> float:
+        t = self.spec.kernel_time(node)
+        if node.phase == "prefill":
+            return t * self.cal.prefill_scale
+        if node.phase == "decode":
+            return t * self.cal.decode_scale
+        return t * self.cal.scale
+
+    def transfer_time(self, nbytes, peer, bw_override=None, repeat=1):
+        return self.spec.transfer_time(nbytes, peer, bw_override, repeat)
+
+
 class CalibratedDevice:
     """DeviceSpec whose kernel times are overridden by measured profiles.
 

@@ -397,6 +397,11 @@ class ReplicaModel:
         self.policy = policy
         self.monitor = monitor
         self.price = price              # $/hr of this device group
+        # Routability flag owned by the deployment control timeline:
+        # warm-up ("up" pending), drain ("down") and failure ("fail")
+        # all mask the group by flipping this; routers skip ineligible
+        # groups (see serving/router.py).
+        self.eligible = True
         self.dev_free = [0.0] * num_devices
         self.link_free = [0.0] * num_devices
         self.dev_busy = [0.0] * num_devices
@@ -530,6 +535,11 @@ class ClusterResult:
     peak_kv_bytes: float = 0.0          # max KV resident awaiting decode
     transfers_avoided: int = 0          # session-affine reuse of resident
     #                                     decode state (no re-transfer)
+    # deployment-elasticity extras (zero without a control timeline)
+    rerouted: int = 0                   # in-flight requests re-routed off
+    #                                     a failed group (recovered)
+    dropped: int = 0                    # accepted requests lost because
+    #                                     no eligible group remained
 
     @property
     def throughput(self) -> float:
@@ -579,45 +589,12 @@ def simulate_cluster(replicas: Sequence[ReplicaModel],
     toward neither throughput nor goodput).  Requests must be sorted by
     arrival.  Deterministic: identical (trace, plans, router) produce a
     bit-identical event log and makespan.
+
+    Thin shim over :func:`simulate_deployment` (no phase splitting, no
+    control timeline) — event logs are bit-identical to the historical
+    standalone loop.
     """
-    events: List[Tuple] = []
-    latencies: List[float] = []
-    ttfts: List[float] = []
-    assignments: List[int] = []
-    max_finish = 0.0
-    shed = slo_ok = 0
-    for req in trace:
-        idx = route_fn(req, replicas, req.arrival)
-        if idx is None or idx < 0:
-            assignments.append(-1)
-            shed += 1
-            continue
-        rep = replicas[idx]
-        finish, first_tok, _ = rep._run_units(req, events)
-        assignments.append(idx)
-        lat = finish - req.arrival
-        latencies.append(lat)
-        ttft = first_tok - req.arrival
-        ttfts.append(ttft)
-        if _meets_slo(req, lat, ttft):
-            slo_ok += 1
-        max_finish = max(max_finish, finish)
-        if rep.monitor is not None:
-            rep.monitor.record_request(
-                finish, finish - req.arrival, rep.predicted_service(req))
-            rep.maybe_switch(req.arrival)
-    t0 = min((r.arrival for r in trace), default=0.0)
-    return ClusterResult(
-        makespan=max_finish - t0 if trace else 0.0,
-        completed=len(latencies),
-        latencies=latencies,
-        assignments=assignments,
-        per_replica_completed=[r.completed for r in replicas],
-        per_replica_busy=[sum(r.dev_busy) for r in replicas],
-        switches=sum(r.switches for r in replicas),
-        events=events,
-        price_rate=sum(r.price for r in replicas),
-        ttfts=ttfts, shed=shed, slo_ok=slo_ok)
+    return simulate_deployment(replicas, trace, route_fn)
 
 
 # --------------------------------------------------------------------- #
@@ -701,37 +678,125 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
     :func:`_stream_kv`), so only the transfer tail lands in TTFT.
     Routers exposing a ``transfers_avoided`` counter (PDRouter
     session affinity) have the per-run delta reported in the result.
+
+    Thin shim over :func:`simulate_deployment` (no control timeline) —
+    event logs are bit-identical to the historical standalone loop.
+    """
+    return simulate_deployment(replicas, trace, route_fn,
+                               interconnect=interconnect,
+                               kv_chunks=kv_chunks)
+
+
+# --------------------------------------------------------------------- #
+# Unified deployment simulation: routing + phase split + elasticity
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    """One entry of a deployment's elasticity timeline.
+
+    ``kind``:
+      * ``"up"``   — the group finishes warm-up at ``time`` and becomes
+        routable (a group with a pending "up" starts ineligible),
+      * ``"down"`` — graceful drain from ``time``: the router stops
+        sending new requests there, resident work finishes normally,
+      * ``"fail"`` — hard kill at ``time``: masked like "down", AND
+        every in-flight request whose completion still depends on the
+        group is re-routed across the survivors from ``time``.
+    """
+    time: float
+    kind: str                   # "up" | "down" | "fail"
+    group: int
+
+    def __post_init__(self):
+        if self.kind not in ("up", "down", "fail"):
+            raise ValueError(f"unknown control-event kind {self.kind!r}")
+
+
+#: fail/down before up at the same instant: a group swapped in exactly
+#: when another dies must not absorb the dead group's in-flight work
+#: before its own warm-up event has fired.
+_EVENT_ORDER = {"fail": 0, "down": 1, "up": 2}
+
+
+def simulate_deployment(replicas: Sequence[ReplicaModel],
+                        trace: Sequence[ClusterRequest],
+                        route_fn,
+                        interconnect: Optional[Interconnect] = None,
+                        kv_chunks: int = 1,
+                        timeline: Sequence[ControlEvent] = ()
+                        ) -> ClusterResult:
+    """One DES entry point behind every serving surface.
+
+    Subsumes :func:`simulate_cluster` (colocated routing) and
+    :func:`simulate_cluster_pd` (phase-split routing with a KV-transfer
+    edge): ``route_fn`` may return a plain index, ``-1``/``None``
+    (shed), or a ``(prefill_idx, decode_idx, admit_at)`` tuple.  With
+    an empty ``timeline`` the event log is bit-identical to the
+    historical per-entry-point loops.
+
+    ``timeline`` adds deployment elasticity (see :class:`ControlEvent`):
+    groups can warm up, drain, or fail mid-trace.  Masking is the same
+    mechanism for all three — the event flips ``ReplicaModel.eligible``
+    and every router skips ineligible groups.  On a failure, in-flight
+    requests whose completion still depended on the dead group (decode
+    resident there, or KV not yet landed from a dead prefill source)
+    are re-submitted through ``route_fn`` at the failure instant; their
+    latency/TTFT then count from the ORIGINAL arrival (the client's
+    view of a retried request).  Nothing is rolled back from any
+    resource timeline: work a victim already performed is wasted (as
+    on real machines), and a victim's PRE-BOOKED future work on
+    surviving groups (e.g. the decode interval reserved for KV that a
+    dead prefill source will never deliver) stays reserved too — the
+    DES commits whole schedules at routing time and does not model
+    cancellation, so survivors look conservatively busier during a
+    failure than a cancelling runtime would.  A victim with no
+    eligible group left to re-route to is counted in ``dropped``
+    (accepted, then lost); a FRESH arrival the router rejects — for
+    admission control or because no eligible group remains — counts in
+    ``shed`` as always (it was never accepted).
+
+    Deterministic: identical (trace, plans, router, timeline) produce a
+    bit-identical event log.
     """
     ic = interconnect or Interconnect()
+    evs = sorted(timeline,
+                 key=lambda e: (e.time, _EVENT_ORDER[e.kind], e.group))
+    for e in evs:
+        if e.group < 0 or e.group >= len(replicas):
+            raise ValueError(f"control event {e} names group {e.group}; "
+                             f"deployment has {len(replicas)}")
+        if e.kind == "up":          # warm-up pending: starts masked
+            replicas[e.group].eligible = False
+    # Per-request mutable record, indexed by trace position.  "served"
+    # records carry the request's CURRENT placement so a later failure
+    # can find and re-route its victims.
+    records: List[Optional[Dict]] = [None] * len(trace)
     events: List[Tuple] = []
-    latencies: List[float] = []
-    ttfts: List[float] = []
-    assignments: List[int] = []
-    # KV residency intervals on decode groups: (arrive, decode_finish,
-    # bytes) — peak concurrent bytes is the "no unbounded KV queue"
-    # check rate matching must keep bounded.
     kv_resident: List[Tuple[float, float, float]] = []
-    max_finish = 0.0
-    shed = slo_ok = transfers = 0
-    transfer_seconds = 0.0
+    counters = {"shed": 0, "dropped": 0, "rerouted": 0,
+                "transfers": 0, "transfer_seconds": 0.0}
     avoided0 = int(getattr(route_fn, "transfers_avoided", 0))
-    for req in trace:
-        decision = route_fn(req, replicas, req.arrival)
+
+    def dispatch(i: int, req: ClusterRequest, now: float,
+                 arrival0: float, fresh: bool) -> None:
+        decision = route_fn(req, replicas, now)
         if not isinstance(decision, tuple):
             if decision is None or decision < 0:
-                assignments.append(-1)
-                shed += 1
-                continue
+                records[i] = {"served": False}
+                counters["shed" if fresh else "dropped"] += 1
+                return
             p_idx = d_idx = decision
             admit_at = req.arrival
         else:
             p_idx, d_idx, admit_at = decision
             admit_at = max(admit_at, req.arrival)
+        kv_i = None
         if p_idx == d_idx:
             rep = replicas[p_idx]
             finish, first_tok, _ = rep._run_units(req, events, "both",
                                                   admit_at)
-            ttft = first_tok - req.arrival
+            ttft_abs, kv_at = first_tok, None
             if rep.monitor is not None:
                 rep.monitor.record_request(
                     finish, finish - req.arrival,
@@ -747,12 +812,13 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
             for (x0, x1) in xfer_evs:
                 events.append((d_idx, req.rid, KV_TRANSFER, p_idx,
                                x0, x1))
-            transfers += 1
-            transfer_seconds += busy
+            counters["transfers"] += 1
+            counters["transfer_seconds"] += busy
             finish, _, _ = dec._run_units(req, events, "decode", kv_at)
             # first token streams from the decode group once the state
             # lands there — transfer time is part of TTFT
-            ttft = kv_at - req.arrival
+            ttft_abs = kv_at
+            kv_i = len(kv_resident)
             kv_resident.append((kv_at, finish, req.kv_bytes))
             # each pool's monitor OBSERVES the queueing its own phase
             # caused (measured from when the work became available),
@@ -772,13 +838,73 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
                 dec.monitor.record_request(
                     finish, finish - kv_at,
                     dec.predicted_phase_service(req, "decode"))
-        assignments.append(d_idx)
-        lat = finish - req.arrival
-        latencies.append(lat)
-        ttfts.append(ttft)
-        if _meets_slo(req, lat, ttft):
+        records[i] = {"served": True, "p": p_idx, "d": d_idx,
+                      "finish": finish, "kv_at": kv_at,
+                      "kv_i": kv_i,
+                      "lat": finish - arrival0,
+                      "ttft": ttft_abs - arrival0}
+
+    ei = 0
+
+    def apply_events(upto: float) -> None:
+        nonlocal ei
+        while ei < len(evs) and evs[ei].time <= upto:
+            e = evs[ei]
+            ei += 1
+            rep = replicas[e.group]
+            if e.kind == "up":
+                rep.eligible = True
+                continue
+            rep.eligible = False
+            if e.kind != "fail":
+                continue            # graceful drain: residents finish
+            for i, rec in enumerate(records):
+                if rec is None or not rec["served"]:
+                    continue
+                hit = ((rec["d"] == e.group and rec["finish"] > e.time)
+                       or (rec["p"] == e.group
+                           and rec["kv_at"] is not None
+                           and rec["kv_at"] > e.time))
+                if not hit:
+                    continue
+                # the completion credited at first submission never
+                # materialized on the dead group
+                replicas[rec["d"]].completed -= 1
+                if rec["kv_i"] is not None:
+                    # the victim's resident-KV interval ends at the
+                    # failure (decode group dead: state vanished with
+                    # it; prefill source dead mid-transfer: the state
+                    # never landed) — without this the re-routed
+                    # transfer would double-count in peak_kv_bytes
+                    a0, a1, w = kv_resident[rec["kv_i"]]
+                    t1 = min(a1, e.time)
+                    kv_resident[rec["kv_i"]] = \
+                        (a0, t1, w) if a0 < t1 else (a0, a0, 0.0)
+                counters["rerouted"] += 1
+                dispatch(i, dataclasses.replace(trace[i],
+                                                arrival=e.time),
+                         e.time, trace[i].arrival, fresh=False)
+
+    for i, req in enumerate(trace):
+        apply_events(req.arrival)
+        dispatch(i, req, req.arrival, req.arrival, fresh=True)
+    apply_events(math.inf)          # events after the last arrival
+
+    latencies: List[float] = []
+    ttfts: List[float] = []
+    assignments: List[int] = []
+    max_finish = 0.0
+    slo_ok = 0
+    for req, rec in zip(trace, records):
+        if not rec["served"]:
+            assignments.append(-1)
+            continue
+        assignments.append(rec["d"])
+        latencies.append(rec["lat"])
+        ttfts.append(rec["ttft"])
+        if _meets_slo(req, rec["lat"], rec["ttft"]):
             slo_ok += 1
-        max_finish = max(max_finish, finish)
+        max_finish = max(max_finish, rec["finish"])
     t0 = min((r.arrival for r in trace), default=0.0)
     return ClusterResult(
         makespan=max_finish - t0 if trace else 0.0,
@@ -790,11 +916,13 @@ def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
         switches=sum(r.switches for r in replicas),
         events=events,
         price_rate=sum(r.price for r in replicas),
-        ttfts=ttfts, shed=shed, slo_ok=slo_ok,
-        transfers=transfers, transfer_seconds=transfer_seconds,
+        ttfts=ttfts, shed=counters["shed"], slo_ok=slo_ok,
+        transfers=counters["transfers"],
+        transfer_seconds=counters["transfer_seconds"],
         peak_kv_bytes=_peak_concurrent(kv_resident),
         transfers_avoided=int(getattr(route_fn, "transfers_avoided", 0))
-        - avoided0)
+        - avoided0,
+        rerouted=counters["rerouted"], dropped=counters["dropped"])
 
 
 def _peak_concurrent(intervals: Sequence[Tuple[float, float, float]]

@@ -3,6 +3,13 @@ kernel disaggregation for the decode step.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt_oss_20b --smoke \
       --requests 8 --disaggregate
+
+Or launch from a serialized deployment spec (the declarative API —
+single engine, or the prefill/decode handoff pair when the spec says
+``pd``; engine knobs come from ``spec.engine``):
+
+  PYTHONPATH=src python -m repro.launch.serve --deployment spec.json \
+      --smoke --requests 8
 """
 from __future__ import annotations
 
@@ -14,6 +21,23 @@ import numpy as np
 import repro.configs as configs
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
+
+
+def _build_requests(args, cfg, max_len: int, rng_seed: int = 0):
+    if args.trace:
+        from repro.serving.engine import requests_from_trace
+        from repro.serving.workload import make_trace
+        trace = make_trace(args.trace, args.rate, args.requests, seed=0)
+        return requests_from_trace(
+            trace, cfg.vocab_size, max_prompt=max_len // 2,
+            max_new=args.max_new)
+    rng = np.random.default_rng(rng_seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8)
+                    .astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    arrival=0.01 * i)
+            for i in range(args.requests)]
 
 
 def main() -> None:
@@ -36,7 +60,28 @@ def main() -> None:
                          "trace instead of fixed arrivals")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="trace arrival rate (req/s)")
+    ap.add_argument("--deployment", default=None, metavar="SPEC_JSON",
+                    help="load a serialized DeploymentSpec and launch "
+                         "its engine topology instead of the ad-hoc "
+                         "flags (--arch/--slots/... are ignored except "
+                         "--smoke/--requests/--max-new/--trace/--rate)")
     args = ap.parse_args()
+
+    if args.deployment:
+        from repro.serving.spec import DeploymentSpec
+        spec = DeploymentSpec.load(args.deployment)
+        arch = spec.arch or args.arch
+        cfg = (configs.get_smoke(arch) if args.smoke
+               else configs.get(arch))
+        launched = spec.compile().launch(cfg)
+        max_len = int(spec.engine.get("max_len", 64))
+        reqs = _build_requests(args, cfg, max_len)
+        out = launched.run(reqs)
+        print(f"deployment: pd={spec.pd} kv_chunks={spec.kv_chunks} "
+              f"engines={len(launched.engines)} "
+              f"wire_bytes={out['wire_bytes']} shards={out['shards']}")
+        print(out["engine"])
+        return
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
@@ -64,21 +109,7 @@ def main() -> None:
         exe = build_executable(traced, plan)
         decode_fn = lambda p, c, t, q: exe(p, c, t, q)
 
-    if args.trace:
-        from repro.serving.engine import requests_from_trace
-        from repro.serving.workload import make_trace
-        trace = make_trace(args.trace, args.rate, args.requests, seed=0)
-        reqs = requests_from_trace(
-            trace, cfg.vocab_size, max_prompt=args.max_len // 2,
-            max_new=args.max_new)
-    else:
-        rng = np.random.default_rng(0)
-        reqs = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size, size=8)
-                        .astype(np.int32),
-                        max_new_tokens=args.max_new,
-                        arrival=0.01 * i)
-                for i in range(args.requests)]
+    reqs = _build_requests(args, cfg, args.max_len)
     engine = ServingEngine(cfg, params, slots=args.slots,
                            max_len=args.max_len, decode_fn=decode_fn,
                            sync_every=args.sync_every)

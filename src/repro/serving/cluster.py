@@ -106,19 +106,34 @@ class TesseraCluster:
         self.initial_policy = initial_policy
         self.model_cfg = model_cfg
         self.interconnect = interconnect or Interconnect()
+        self.policies = tuple(policies)
+        self.bw_override = bw_override
+        self.anneal_iters = anneal_iters
         self.groups: List[ReplicaGroup] = []
-        for i, group in enumerate(replica_devices):
+        self.add_groups(replica_devices)
+
+    def add_groups(self, replica_devices: Sequence[Sequence]
+                   ) -> List[ReplicaGroup]:
+        """Plan and append replica groups (the autoscaling add path —
+        a scaled-in group is planned exactly like a founding one).
+        Returns the new :class:`ReplicaGroup` records."""
+        new: List[ReplicaGroup] = []
+        for group in replica_devices:
             devices = resolve_devices(group)
             # Identical device sets hit the planner's plan cache, so a
             # 16-device cluster of 8 identical pairs solves each policy
             # once — the same path monitor-triggered re-planning takes.
-            plans = {pol: planner.plan(graph, devices, policy=pol,
-                                       bw_override=bw_override,
-                                       anneal_iters=anneal_iters)
-                     for pol in policies}
-            units = {pol: replica_units(graph, plan, devices, bw_override)
+            plans = {pol: planner.plan(self.graph, devices, policy=pol,
+                                       bw_override=self.bw_override,
+                                       anneal_iters=self.anneal_iters)
+                     for pol in self.policies}
+            units = {pol: replica_units(self.graph, plan, devices,
+                                        self.bw_override)
                      for pol, plan in plans.items()}
-            self.groups.append(ReplicaGroup(i, devices, plans, units))
+            g = ReplicaGroup(len(self.groups), devices, plans, units)
+            self.groups.append(g)
+            new.append(g)
+        return new
 
     # -------------------------------------------------------------- #
     @property

@@ -43,14 +43,27 @@ prefill admission is throttled by the decode pool's backlog so the
 decode side never accumulates an unbounded queue of transferred KV
 ("Beyond the Buzz", arXiv 2506.05508).
 
+Eligibility: the deployment layer (``serving/spec.py`` +
+``simulator.simulate_deployment``) masks groups that are warming up,
+draining, or failed by flipping ``ReplicaModel.eligible``; every router
+skips ineligible groups and returns ``-1`` when none remain.  With all
+groups eligible (the only state the legacy entry points can produce)
+every decision is bit-identical to the pre-eligibility routers.
+
 Routers only read replica state; :func:`repro.core.simulator
-.simulate_cluster` (or a real dispatch loop) owns the clock.
+.simulate_deployment` (or a real dispatch loop) owns the clock.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import ClusterRequest, ReplicaModel
+
+
+def eligible_indices(replicas: Sequence[ReplicaModel]) -> List[int]:
+    """Groups a router may currently send work to."""
+    return [i for i in range(len(replicas))
+            if getattr(replicas[i], "eligible", True)]
 
 
 class Router:
@@ -76,9 +89,15 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def route(self, req, replicas, now) -> int:
-        idx = self._next % len(replicas)
-        self._next += 1
-        return idx
+        # advance the cursor past masked groups so the cycle covers
+        # exactly the eligible set (identical to the legacy cycle when
+        # everything is eligible)
+        for _ in range(len(replicas)):
+            idx = self._next % len(replicas)
+            self._next += 1
+            if getattr(replicas[idx], "eligible", True):
+                return idx
+        return -1
 
 
 class LeastLoadedRouter(Router):
@@ -88,8 +107,10 @@ class LeastLoadedRouter(Router):
     name = "least_loaded"
 
     def route(self, req, replicas, now) -> int:
-        return min(range(len(replicas)),
-                   key=lambda i: (replicas[i].backlog(now), i))
+        cand = eligible_indices(replicas)
+        if not cand:
+            return -1
+        return min(cand, key=lambda i: (replicas[i].backlog(now), i))
 
 
 class JSEDRouter(Router):
@@ -125,11 +146,20 @@ class JSEDRouter(Router):
                 > req.slo_ttft)
 
     def route(self, req, replicas, now) -> int:
-        best = min(range(len(replicas)),
+        cand = eligible_indices(replicas)
+        if not cand:
+            return -1
+        best = min(cand,
                    key=lambda i: (self.score(req, replicas[i], now), i))
         choice = best
         if req.session is not None:
             home = self._session_home.get(req.session)
+            if home is not None and not getattr(replicas[home],
+                                                "eligible", True):
+                # the home group drained or died; its resident state is
+                # gone — the session re-homes on whatever JSED picks
+                del self._session_home[req.session]
+                home = None
             if home is not None:
                 stay_cost = replicas[home].backlog(now)
                 move_cost = replicas[best].backlog(now)
@@ -265,8 +295,27 @@ class PDRouter(Router):
         """Returns (prefill_idx, decode_idx, admit_at) — or -1 (shed),
         or a plain index when the pools degenerate to one group."""
         pre_pool, dec_pool = self.pools(replicas)
+        # masked groups (warm-up / drain / failure) drop out of their
+        # pool; a pool that empties collapses onto the other (the
+        # survivors serve both phases colocated) so elasticity cannot
+        # strand a phase
+        pre_pool = [i for i in pre_pool
+                    if getattr(replicas[i], "eligible", True)]
+        dec_pool = [i for i in dec_pool
+                    if getattr(replicas[i], "eligible", True)]
+        if not pre_pool and not dec_pool:
+            return -1
+        if not pre_pool:
+            pre_pool = dec_pool
+        if not dec_pool:
+            dec_pool = pre_pool
         if self.session_affinity and req.session is not None:
             home = self._session_decode.get(req.session)
+            if home is not None and not getattr(replicas[home],
+                                                "eligible", True):
+                # resident state left with the group; re-split afresh
+                del self._session_decode[req.session]
+                home = None
             if home is not None:
                 stay = replicas[home].backlog(now)
                 best = min(replicas[i].backlog(now) for i in dec_pool)
@@ -314,16 +363,35 @@ class PDRouter(Router):
         return p, d, now + lag
 
 
-ROUTERS = {
-    cls.name: cls
-    for cls in (RoundRobinRouter, LeastLoadedRouter, JSEDRouter,
-                PDRouter)
-}
+ROUTERS: Dict[str, type] = {}
+
+
+def register_router(cls: type) -> type:
+    """Add a Router class to the by-name registry used by
+    :func:`make_router` and ``DeploymentSpec`` validation.  Usable as a
+    decorator; returns the class.  Registering a duplicate name
+    replaces the previous entry (latest wins), so downstream code can
+    override a stock policy.
+    """
+    name = getattr(cls, "name", None)
+    if not name or name == Router.name:
+        raise ValueError(f"router class {cls!r} needs a distinct "
+                         "class-level `name` to be registered")
+    ROUTERS[name] = cls
+    return cls
+
+
+for _cls in (RoundRobinRouter, LeastLoadedRouter, JSEDRouter, PDRouter):
+    register_router(_cls)
 
 
 def make_router(name: str, **kw) -> Router:
+    """Instantiate a registered router policy by name with kwargs —
+    the constructor ``DeploymentSpec.router`` / ``router_kwargs``
+    compile down to."""
     try:
-        return ROUTERS[name](**kw)
+        cls = ROUTERS[name]
     except KeyError:
         raise ValueError(f"unknown router {name!r}; "
                          f"pick from {sorted(ROUTERS)}") from None
+    return cls(**kw)

@@ -1,0 +1,227 @@
+"""Heterogeneous replica *sizing*: which devices to group, under $/hr.
+
+The cluster layer routes across a GIVEN set of replica groups; this
+module searches over the composition itself — which devices from an
+inventory pair into which groups — for a rental budget, scored by the
+deployment DES.  This is the ROADMAP item HexGen-2 solves with a
+genetic scheduler; here the search is a greedy seed refined by
+simulated-annealing mutations (swap / add / drop a group), which is
+the same shape at the scale this repo simulates (inventories of a few
+device types, compositions of 2–8 groups).
+
+Objective: **goodput per dollar** — requests served within BOTH SLO
+components per $ of rental (``ClusterResult.goodput * 3600 /
+price_rate``).  A fixed open-loop trace is the demand; a composition
+wins by serving that demand within SLOs on cheaper hardware, not by
+provisioning capacity nobody asked for.  Every candidate is scored by
+a full deterministic DES replay, so the search is reproducible
+bit-for-bit from (inventory, budget, trace, seed).
+
+Search moves reuse the process-wide plan cache: a candidate that
+re-uses an already-planned group template costs only a DES replay
+(milliseconds), so the annealing loop stays cheap even though every
+score is a real simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from collections import Counter
+from itertools import combinations_with_replacement
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import planner
+from repro.core.costmodel import CATALOG
+from repro.core.simulator import ClusterResult
+from repro.serving.spec import DeploymentSpec
+
+GroupTemplate = Tuple[str, ...]         # sorted device names, one group
+
+
+@dataclasses.dataclass
+class SizingResult:
+    """Outcome of :func:`search_composition`."""
+    spec: DeploymentSpec                # best composition found
+    score: float                        # goodput/$ (req per dollar)
+    result: ClusterResult               # DES result of the best spec
+    seed_score: float                   # greedy seed's score
+    evals: int                          # distinct compositions scored
+    history: List[Tuple[int, float, float]]  # (iter, candidate, best)
+
+    @property
+    def composition(self) -> List[List[str]]:
+        return self.spec.groups
+
+
+def group_price(template: Sequence[str]) -> float:
+    return sum(CATALOG[n].price for n in template)
+
+
+def group_templates(inventory: Dict[str, int],
+                    max_group: int = 2) -> List[GroupTemplate]:
+    """Candidate replica-group shapes drawable from the inventory:
+    every multiset of 1..max_group device types with enough stock."""
+    names = sorted(n for n, c in inventory.items() if c > 0)
+    for n in names:
+        if n not in CATALOG:
+            raise ValueError(f"unknown device {n!r}; "
+                             f"pick from {sorted(CATALOG)}")
+    out: List[GroupTemplate] = []
+    for k in range(1, max_group + 1):
+        for combo in combinations_with_replacement(names, k):
+            need = Counter(combo)
+            if all(inventory[n] >= c for n, c in need.items()):
+                out.append(tuple(combo))
+    return out
+
+
+def _fits(comp: Sequence[GroupTemplate], inventory: Dict[str, int],
+          budget: float) -> bool:
+    used: Counter = Counter()
+    for t in comp:
+        used.update(t)
+    if any(used[n] > inventory.get(n, 0) for n in used):
+        return False
+    return sum(group_price(t) for t in comp) <= budget + 1e-9
+
+
+def modeled_capacity(template: GroupTemplate, graph,
+                     anneal_iters: int = 300) -> float:
+    """Steady-state req/s ceiling of one group: 1 / pipelined
+    bottleneck of its throughput plan (plan-cache backed)."""
+    devices = [CATALOG[n] for n in template]
+    plan = planner.plan(graph, devices, policy="throughput",
+                        anneal_iters=anneal_iters)
+    return 1.0 / max(plan.bottleneck, 1e-12)
+
+
+def greedy_composition(inventory: Dict[str, int], budget: float, graph,
+                       *, max_group: int = 2,
+                       anneal_iters: int = 300) -> List[GroupTemplate]:
+    """Greedy seed: repeatedly add the feasible group template with the
+    best modeled capacity-per-dollar until neither budget nor inventory
+    admits another group."""
+    templates = group_templates(inventory, max_group)
+    if not templates:
+        raise ValueError("inventory admits no group template")
+    ratio = {t: modeled_capacity(t, graph, anneal_iters) / group_price(t)
+             for t in templates}
+    order = sorted(templates, key=lambda t: (-ratio[t], t))
+    comp: List[GroupTemplate] = []
+    progress = True
+    while progress:
+        progress = False
+        for t in order:
+            if _fits(comp + [t], inventory, budget):
+                comp.append(t)
+                progress = True
+                break
+    if not comp:
+        raise ValueError(f"budget ${budget}/hr cannot afford any group "
+                         f"(cheapest template costs "
+                         f"${min(group_price(t) for t in templates):.2f})")
+    return comp
+
+
+def uniform_composition(inventory: Dict[str, int], budget: float, graph,
+                        *, template: Optional[Sequence[str]] = None,
+                        max_group: int = 2,
+                        anneal_iters: int = 300) -> List[List[str]]:
+    """The naive same-budget baseline: fill the budget with copies of
+    ONE group template — by default the highest modeled-capacity
+    feasible one (the "just buy the big pairs" strategy the paper's
+    heterogeneous compositions are measured against)."""
+    if template is None:
+        templates = group_templates(inventory, max_group)
+        afford = [t for t in templates
+                  if group_price(t) <= budget + 1e-9]
+        if not afford:
+            raise ValueError("budget cannot afford any group")
+        template = max(afford, key=lambda t: (
+            modeled_capacity(t, graph, anneal_iters), t))
+    t = tuple(template)
+    comp: List[GroupTemplate] = []
+    while _fits(comp + [t], inventory, budget):
+        comp.append(t)
+    if not comp:
+        raise ValueError(f"template {t} never fits budget/inventory")
+    return [list(g) for g in comp]
+
+
+# --------------------------------------------------------------------- #
+def search_composition(inventory: Dict[str, int], budget: float,
+                       trace, graph, *,
+                       iters: int = 60, seed: int = 0,
+                       max_group: int = 2,
+                       temperature: float = 0.08,
+                       spec_kwargs: Optional[Dict[str, Any]] = None
+                       ) -> SizingResult:
+    """Search replica-group compositions for ``budget`` $/hr.
+
+    ``inventory`` maps device-catalog names to available counts;
+    ``trace`` is the demand (a ``serving.workload`` trace — give it or
+    the spec SLOs so goodput is meaningful); ``graph`` the request DDG
+    the planner places.  ``spec_kwargs`` are forwarded into every
+    candidate :class:`DeploymentSpec` (router, slos, pd, monitor,
+    calibration, ...) — the search varies ONLY ``groups``.
+
+    Greedy seed (capacity/$ ordering) + ``iters`` simulated-annealing
+    mutations: swap one group for a random feasible template, add a
+    template, or drop a group.  Every candidate is scored by a full
+    DES replay of ``trace``; annealing accepts uphill always and
+    downhill with probability ``exp(rel_delta / T)``, T decaying to 0
+    over the run.  Deterministic in all arguments.
+    """
+    skw = dict(spec_kwargs or {})
+    skw.setdefault("router", "jsed")
+    skw["budget"] = budget
+    rng = random.Random(f"sizing:{seed}")
+    templates = group_templates(inventory, max_group)
+    cache: Dict[Tuple, Tuple[float, DeploymentSpec, ClusterResult]] = {}
+
+    def evaluate(comp: Sequence[GroupTemplate]):
+        key = tuple(sorted(comp))
+        if key not in cache:
+            spec = DeploymentSpec(groups=[list(t) for t in comp], **skw)
+            res = spec.compile(graph).simulate(trace)
+            score = res.goodput * 3600.0 / max(spec.price_rate, 1e-12)
+            cache[key] = (score, spec, res)
+        return cache[key]
+
+    def mutate(comp: List[GroupTemplate]
+               ) -> Optional[List[GroupTemplate]]:
+        op = rng.choice(("swap", "swap", "add", "drop"))
+        cand = list(comp)
+        if op == "swap":
+            cand[rng.randrange(len(cand))] = rng.choice(templates)
+        elif op == "add":
+            cand.append(rng.choice(templates))
+        elif len(cand) > 1:
+            cand.pop(rng.randrange(len(cand)))
+        else:
+            return None
+        return cand if _fits(cand, inventory, budget) else None
+
+    cur = greedy_composition(inventory, budget, graph,
+                             max_group=max_group)
+    cur_score, _, _ = evaluate(cur)
+    seed_score = cur_score
+    best, best_score = list(cur), cur_score
+    history: List[Tuple[int, float, float]] = [(0, cur_score, best_score)]
+    for it in range(1, iters + 1):
+        T = temperature * (1.0 - it / (iters + 1))
+        cand = mutate(cur)
+        if cand is None:
+            continue
+        s, _, _ = evaluate(cand)
+        rel = (s - cur_score) / max(cur_score, 1e-12)
+        if s >= cur_score or rng.random() < math.exp(rel / max(T, 1e-9)):
+            cur, cur_score = cand, s
+        if s > best_score:
+            best, best_score = list(cand), s
+        history.append((it, s, best_score))
+    score, spec, result = evaluate(best)
+    return SizingResult(spec=spec, score=score, result=result,
+                        seed_score=seed_score, evals=len(cache),
+                        history=history)

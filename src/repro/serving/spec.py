@@ -1,0 +1,486 @@
+"""Declarative deployment API: one spec, two backends (DES / engines).
+
+Tessera's headline result is that *deployment shape* — which devices
+group into which replica, how phases split across groups, how requests
+route — is where heterogeneous wins live.  Before this module the repo
+had four parallel entry points for exercising a shape
+(``simulate_cluster``, ``simulate_cluster_pd``,
+``TesseraCluster.simulate/simulate_pd`` and the hand-wired two-engine
+handoff in ``examples/serve_pipeline.py``), which made shape *search*
+and runtime *elasticity* impossible to express.  The redesign:
+
+  * :class:`DeploymentSpec` — a serializable, validated description of
+    a deployment: device inventory per replica group, inter-group
+    fabric, router policy by name + kwargs (``router.ROUTERS``
+    registry), phase-split/overlap config (``pd``, ``kv_chunks``,
+    affinity via ``router_kwargs``), SLOs, a ``$/hr`` budget and an
+    optional measured calibration (``costmodel.calibrate``).
+    ``to_json``/``from_json`` round-trip exactly, so a deployment shape
+    is a file you can diff, ship and search over.
+  * ``spec.compile(graph)`` → :class:`Deployment`, one protocol with
+    two backends:
+      - :meth:`Deployment.simulate` drives the unified cluster DES
+        (``simulator.simulate_deployment``) — subsumes both legacy
+        simulate entry points with bit-identical event logs,
+      - :meth:`Deployment.launch` instantiates real
+        :class:`~repro.serving.engine.ServingEngine` s — a single
+        continuous-batching engine, or the prefill+decode pair wired
+        through the (optionally streamed) KV handoff.
+  * :meth:`Deployment.scale` — runtime autoscaling on the DES backend:
+    removed groups drain (the router masks them, resident decode
+    sessions finish — loss-free), added groups warm up for a modeled
+    delay before becoming routable.
+  * ``Deployment.simulate(failures=[(t, group)])`` — replica-level
+    fault injection through the same masking machinery: the dead
+    group's in-flight requests re-route across the survivors.
+
+``serving/sizing.py`` builds composition search on top of this:
+mutate ``spec.groups``, score by simulated goodput/$.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import CATALOG, Calibration, calibrate
+from repro.core.monitor import MonitorConfig
+from repro.core.simulator import (ClusterResult, ControlEvent,
+                                  Interconnect, simulate_deployment)
+from repro.serving.cluster import TesseraCluster
+from repro.serving.router import ROUTERS, make_router
+from repro.serving.workload import WorkloadRequest, assign_slos
+
+_SLO_KEYS = frozenset({"base", "per_output_token", "ttft"})
+_IC_KEYS = frozenset({"default_bw", "base_latency", "bw"})
+_ENGINE_KEYS = frozenset({"slots", "max_len", "sync_every",
+                          "temperature", "seed", "smoke"})
+_POLICIES = ("latency", "throughput")
+
+
+def _field(default):
+    return dataclasses.field(default_factory=default)
+
+
+@dataclasses.dataclass
+class DeploymentSpec:
+    """Declarative description of one serving deployment.
+
+    ``groups``: device-catalog names per replica group, e.g.
+    ``[["h100", "rtxpro6000"], ["a100", "l40s"]]`` — names only (not
+    DeviceSpec objects) so the spec serializes; resolution happens at
+    compile.  ``router``/``router_kwargs`` name a registered policy
+    (``repro.serving.router.ROUTERS``) — affinity and pool overrides
+    live in the kwargs.  ``pd`` selects phase-split simulation and the
+    two-engine launch pairing; ``kv_chunks > 1`` streams each KV
+    handoff overlapped with the remaining prefill.  ``slos`` (keys
+    ``base``/``per_output_token``/``ttft``) are stamped onto every
+    simulated trace; ``budget`` is a hard ``$/hr`` ceiling enforced at
+    construction; ``calibration`` is a ``CALIBRATION`` payload (see
+    ``costmodel.calibrate``) scaling the DES service profiles by
+    measured wall/model ratios.  ``engine`` carries launch-time knobs
+    (``slots``, ``max_len``, ``sync_every``, ``temperature``,
+    ``seed``, ``smoke``).
+
+    Validated at construction; every field is JSON-serializable and
+    ``from_json(spec.to_json()) == spec``.
+    """
+
+    groups: List[List[str]]
+    arch: Optional[str] = None          # model architecture (launch +
+    #                                     KV-size model)
+    base_prompt: int = 1024             # token counts the graph was
+    base_output: int = 128              # traced with (per-request scale)
+    router: str = "jsed"
+    router_kwargs: Dict[str, Any] = _field(dict)
+    pd: bool = False                    # phase-split serving
+    kv_chunks: int = 1                  # >1 = overlapped KV streaming
+    interconnect: Dict[str, Any] = _field(dict)
+    slos: Optional[Dict[str, float]] = None
+    budget: Optional[float] = None      # $/hr ceiling over all groups
+    calibration: Optional[Dict[str, float]] = None
+    monitor: Optional[Dict[str, float]] = _field(dict)  # None disables
+    initial_policy: str = "latency"
+    anneal_iters: int = 1000            # planner effort per group
+    bw_override: Optional[float] = None
+    engine: Dict[str, Any] = _field(dict)
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if not self.groups or any(not g for g in self.groups):
+            raise ValueError("spec needs at least one non-empty "
+                             "replica group")
+        for g in self.groups:
+            for name in g:
+                if name not in CATALOG:
+                    raise ValueError(
+                        f"unknown device {name!r}; "
+                        f"pick from {sorted(CATALOG)}")
+        if self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; "
+                             f"pick from {sorted(ROUTERS)}")
+        if self.kv_chunks < 1:
+            raise ValueError(f"kv_chunks must be >= 1, "
+                             f"got {self.kv_chunks}")
+        if self.kv_chunks > 1 and not self.pd:
+            raise ValueError("kv_chunks > 1 streams the prefill->decode "
+                             "KV handoff; it requires pd=True")
+        if self.slos is not None:
+            bad = set(self.slos) - _SLO_KEYS
+            if bad:
+                raise ValueError(f"unknown slo keys {sorted(bad)}; "
+                                 f"pick from {sorted(_SLO_KEYS)}")
+            if not any(v and v > 0 for v in self.slos.values()):
+                raise ValueError("slos must set at least one positive "
+                                 "deadline")
+        bad = set(self.interconnect) - _IC_KEYS
+        if bad:
+            raise ValueError(f"unknown interconnect keys {sorted(bad)}; "
+                             f"pick from {sorted(_IC_KEYS)}")
+        for key in self.interconnect.get("bw") or {}:
+            src, _, dst = str(key).partition("-")
+            if not (src.isdigit() and dst.isdigit()):
+                raise ValueError(
+                    f"interconnect bw override key {key!r} must be "
+                    "'src-dst' group indices, e.g. '0-1'")
+        bad = set(self.engine) - _ENGINE_KEYS
+        if bad:
+            raise ValueError(f"unknown engine keys {sorted(bad)}; "
+                             f"pick from {sorted(_ENGINE_KEYS)}")
+        if self.initial_policy not in _POLICIES:
+            raise ValueError(f"initial_policy must be one of "
+                             f"{_POLICIES}, got {self.initial_policy!r}")
+        if self.calibration is not None:
+            calibrate(self.calibration)     # raises on a bad payload
+        if self.monitor:
+            MonitorConfig(**self.monitor)   # raises on unknown fields
+        if self.budget is not None and self.price_rate > self.budget + 1e-9:
+            raise ValueError(
+                f"composition costs ${self.price_rate:.2f}/hr, over the "
+                f"${self.budget:.2f}/hr budget")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def price_rate(self) -> float:
+        """$/hr of the declared composition (catalog rental prices)."""
+        return sum(CATALOG[n].price for g in self.groups for n in g)
+
+    def make_interconnect(self) -> Interconnect:
+        bw = {tuple(int(x) for x in str(k).split("-")): float(v)
+              for k, v in (self.interconnect.get("bw") or {}).items()}
+        return Interconnect(
+            default_bw=float(self.interconnect.get("default_bw", 100e9)),
+            base_latency=float(self.interconnect.get("base_latency",
+                                                     20e-6)),
+            bw=bw)
+
+    def calibration_model(self) -> Optional[Calibration]:
+        return (calibrate(self.calibration)
+                if self.calibration is not None else None)
+
+    # ------------------------------------------------------------------ #
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "DeploymentSpec":
+        obj = json.loads(s)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(obj) - known
+        if unknown:
+            raise ValueError(f"unknown DeploymentSpec fields "
+                             f"{sorted(unknown)}")
+        return cls(**obj)
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "DeploymentSpec":
+        return cls.from_json(Path(path).read_text())
+
+    # ------------------------------------------------------------------ #
+    def compile(self, graph=None, model_cfg=None) -> "Deployment":
+        """Bind the spec to a kernel graph.  ``graph`` may be omitted
+        when only :meth:`Deployment.launch` will be used (engines need
+        the model, not the DDG); :meth:`Deployment.simulate` requires
+        it.  ``model_cfg`` overrides the KV-size model (defaults to
+        the config of ``spec.arch`` when set)."""
+        return Deployment(self, graph, model_cfg)
+
+
+# --------------------------------------------------------------------- #
+class Deployment:
+    """A compiled :class:`DeploymentSpec`: one protocol, two backends.
+
+    * :meth:`simulate` — the cluster DES, with optional fault
+      injection and the elasticity timeline :meth:`scale` builds.
+    * :meth:`launch` — real ``ServingEngine`` s in the spec's shape.
+
+    Replica-group planning (the expensive part) happens lazily on
+    first ``simulate`` and is shared across repeated simulations;
+    every simulate call replays against FRESH replica/router state, so
+    one Deployment supports apples-to-apples comparisons.
+    """
+
+    def __init__(self, spec: DeploymentSpec, graph=None, model_cfg=None):
+        self.spec = spec
+        self.graph = graph
+        self.model_cfg = model_cfg
+        self._cluster: Optional[TesseraCluster] = None
+        self._timeline: List[ControlEvent] = []
+        self._extra_groups: List[List[str]] = []
+
+    # ------------------------------------------------------------------ #
+    @property
+    def num_groups(self) -> int:
+        return len(self.spec.groups) + len(self._extra_groups)
+
+    @property
+    def price_rate(self) -> float:
+        """$/hr including scaled-in groups (drained groups still count:
+        the spec does not model partial-hour billing)."""
+        return self.spec.price_rate + sum(
+            CATALOG[n].price for g in self._extra_groups for n in g)
+
+    def _resolved(self, group: Sequence[str]):
+        cal = self.spec.calibration_model()
+        devs = [CATALOG[n] for n in group]
+        return cal.apply_all(devs) if cal is not None else devs
+
+    def _model_cfg(self):
+        if self.model_cfg is not None:
+            return self.model_cfg
+        if self.spec.arch:
+            import repro.configs as configs
+            return configs.get(self.spec.arch)
+        return None
+
+    def cluster(self) -> TesseraCluster:
+        """The planned cluster behind the DES backend (lazy)."""
+        if self._cluster is None:
+            if self.graph is None:
+                raise ValueError("Deployment.simulate needs "
+                                 "spec.compile(graph); this deployment "
+                                 "was compiled without one")
+            spec = self.spec
+            mon = (MonitorConfig(**spec.monitor)
+                   if spec.monitor is not None else None)
+            all_groups = list(spec.groups) + self._extra_groups
+            self._cluster = TesseraCluster(
+                self.graph,
+                [self._resolved(g) for g in all_groups],
+                base_prompt=spec.base_prompt,
+                base_output=spec.base_output,
+                monitor_cfg=mon,
+                initial_policy=spec.initial_policy,
+                bw_override=spec.bw_override,
+                anneal_iters=spec.anneal_iters,
+                model_cfg=self._model_cfg(),
+                interconnect=spec.make_interconnect())
+        return self._cluster
+
+    def _router(self):
+        kw = dict(self.spec.router_kwargs)
+        if self.spec.router == "pd_split":
+            # the PD router's shed estimate should charge the same
+            # transfer tail the DES will produce
+            kw.setdefault("interconnect", self.spec.make_interconnect())
+            kw.setdefault("kv_chunks", self.spec.kv_chunks)
+        return make_router(self.spec.router, **kw)
+
+    # ------------------------------------------------------------------ #
+    def scale(self, *, add: Optional[Sequence[Sequence[str]]] = None,
+              remove: Optional[Sequence[int]] = None,
+              at: float = 0.0, warmup: float = 1.0) -> "Deployment":
+        """Schedule runtime autoscaling on the DES backend.
+
+        ``remove``: group indices that begin a graceful drain at
+        ``at`` — the router masks them immediately, resident work
+        (decode sessions included) finishes normally, and no accepted
+        request is dropped as long as another group stays eligible.
+        ``add``: device-name lists planned now but routable only from
+        ``at + warmup`` (modeled weight-load + compile delay).  The
+        timeline composes: call ``scale`` repeatedly to script a whole
+        capacity schedule, then :meth:`simulate`.  Returns ``self``.
+
+        Note: ``scale`` deliberately does NOT re-check ``spec.budget``
+        — emergency capacity beyond the provisioning budget is an
+        operator decision the spec cannot veto; :attr:`price_rate`
+        reports the honest post-scale rate.
+        """
+        for g in (remove or []):
+            g = int(g)
+            if not 0 <= g < self.num_groups:
+                raise ValueError(f"cannot remove group {g}; deployment "
+                                 f"has {self.num_groups}")
+            self._timeline.append(ControlEvent(float(at), "down", g))
+        for group in (add or []):
+            for name in group:
+                if name not in CATALOG:
+                    raise ValueError(f"unknown device {name!r}; "
+                                     f"pick from {sorted(CATALOG)}")
+            idx = self.num_groups
+            self._extra_groups.append(list(group))
+            if self._cluster is not None:
+                self._cluster.add_groups([self._resolved(group)])
+            self._timeline.append(
+                ControlEvent(float(at) + float(warmup), "up", idx))
+        return self
+
+    # ------------------------------------------------------------------ #
+    def simulate(self, trace: Sequence[WorkloadRequest], *,
+                 failures: Optional[Sequence[Tuple[float, int]]] = None,
+                 router=None) -> ClusterResult:
+        """Replay an open-loop trace on the DES backend.
+
+        ``failures=[(t, group_idx), ...]`` hard-kills groups mid-trace
+        (in-flight requests re-route, see
+        ``simulator.simulate_deployment``); the autoscaling timeline
+        from :meth:`scale` is applied on every call.  ``router``
+        overrides the spec's policy with a caller-built instance
+        (apples-to-apples replays); by default a FRESH router is built
+        per call so no routing state leaks between replays.  When the
+        spec declares ``slos`` they are stamped onto the trace
+        (overriding any the trace already carried).
+        """
+        cluster = self.cluster()
+        if self.spec.slos:
+            trace = assign_slos(trace, **self.spec.slos)
+        timeline = list(self._timeline)
+        for (t, g) in (failures or []):
+            g = int(g)
+            if not 0 <= g < self.num_groups:
+                raise ValueError(f"cannot fail group {g}; deployment "
+                                 f"has {self.num_groups}")
+            timeline.append(ControlEvent(float(t), "fail", g))
+        creqs = [cluster.to_cluster_request(r)
+                 for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
+        return simulate_deployment(
+            cluster.build_replicas(), creqs, router or self._router(),
+            interconnect=cluster.interconnect,
+            kv_chunks=self.spec.kv_chunks,
+            timeline=timeline)
+
+    # ------------------------------------------------------------------ #
+    def launch(self, cfg=None, params=None) -> "LaunchedDeployment":
+        """Instantiate the spec's shape with REAL engines.
+
+        ``cfg``/``params`` default from ``spec.arch`` (smoke-sized
+        unless ``spec.engine["smoke"]`` is false — full configs do not
+        fit a CPU host).  The launch backend realizes the phase
+        topology (single engine, or prefill+decode pair with serial or
+        streamed KV handoff); it does not model the DES's queueing
+        knobs (router, SLOs), which have no meaning for two local
+        engines.
+        """
+        spec = self.spec
+        if cfg is None:
+            if not spec.arch:
+                raise ValueError("launch needs spec.arch or an "
+                                 "explicit cfg")
+            import repro.configs as configs
+            cfg = (configs.get_smoke(spec.arch)
+                   if spec.engine.get("smoke", True)
+                   else configs.get(spec.arch))
+        if params is None:
+            from repro.models import model as M
+            params = M.init_params(cfg)
+        return LaunchedDeployment(spec, cfg, params)
+
+
+# --------------------------------------------------------------------- #
+class LaunchedDeployment:
+    """Real-engine backend of a :class:`DeploymentSpec`.
+
+    ``pd=False``: one continuous-batching :class:`ServingEngine`.
+    ``pd=True``: a prefill engine + decode engine wired through the KV
+    handoff — serial ``prefill_handoff``/``admit_handoff`` export/
+    import, or streamed (layer, chunk) shards overlapping the
+    remaining prefill when ``kv_chunks > 1`` — the two-engine flow
+    that previously existed only as example code.  Greedy decode is
+    bit-identical to a single engine either way (asserted in
+    tests/test_deployment.py and examples/serve_pipeline.py).
+    """
+
+    def __init__(self, spec: DeploymentSpec, cfg, params):
+        from repro.serving.engine import ServingEngine
+        self.spec = spec
+        self.cfg = cfg
+        self.params = params
+        self.wire_bytes = 0
+        self.shards = 0
+        ekw = spec.engine
+        self.max_len = int(ekw.get("max_len", 64))
+        common = dict(slots=int(ekw.get("slots", 4)),
+                      max_len=self.max_len,
+                      temperature=float(ekw.get("temperature", 0.0)),
+                      seed=int(ekw.get("seed", 0)))
+        sync_every = int(ekw.get("sync_every", 4))
+        if spec.pd:
+            chunk = (max(1, math.ceil(self.max_len / spec.kv_chunks))
+                     if spec.kv_chunks > 1 else None)
+            self.prefill_engine = ServingEngine(cfg, params,
+                                                prefill_chunk=chunk,
+                                                **common)
+            self.decode_engine = ServingEngine(cfg, params,
+                                               sync_every=sync_every,
+                                               **common)
+            self.engines = [self.prefill_engine, self.decode_engine]
+        else:
+            self.engine = ServingEngine(cfg, params,
+                                        sync_every=sync_every, **common)
+            self.engines = [self.engine]
+
+    # ------------------------------------------------------------------ #
+    def _counted(self, gen):
+        for item in gen:
+            if not item.get("header"):
+                self.shards += 1
+                self.wire_bytes += item["bytes"]
+            yield item
+
+    def run(self, requests: Sequence) -> Dict[str, Any]:
+        """Serve ``requests`` (engine ``Request`` objects, mutated in
+        place with outputs/timestamps) to completion.  Returns a stats
+        dict; for a PD pair the decode engine's stats are the
+        user-visible ones (it streams every token)."""
+        if not self.spec.pd:
+            stats = self.engine.run(list(requests))
+            return {"engine": stats.summary(), "wire_bytes": 0,
+                    "shards": 0}
+        t0 = time.perf_counter()
+        pre, dec = self.prefill_engine, self.decode_engine
+
+        def clk() -> float:
+            return time.perf_counter() - t0
+
+        ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if self.spec.kv_chunks > 1:
+            for req in ordered:
+                gen = self._counted(pre.prefill_handoff_stream(req,
+                                                               clk()))
+                while not dec.admit_handoff_stream(req, gen, clk()):
+                    dec.step(clk())     # drain a slot, retry
+        else:
+            handoffs: List[Tuple[Any, Dict]] = []
+            for req in ordered:
+                h = pre.prefill_handoff(req, clk())
+                if not h["done"]:
+                    self.wire_bytes += h["kv_bytes"]
+                    handoffs.append((req, h))
+            while handoffs:
+                while handoffs and dec.admit_handoff(
+                        handoffs[0][0], handoffs[0][1], clk()):
+                    handoffs.pop(0)
+                if handoffs:
+                    dec.step(clk())
+        while dec._any_active():
+            dec.step(clk())
+        dec.sync(clk())
+        return {"engine": dec.stats.summary(),
+                "prefill": pre.stats.summary(),
+                "wire_bytes": self.wire_bytes, "shards": self.shards}

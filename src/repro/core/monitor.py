@@ -48,7 +48,10 @@ class OnlineMonitor:
         self._win_exec: List[float] = []
         self._win_groups: List[float] = []
         self._window_end: Optional[float] = None
-        self.history: List[Tuple[float, str, float]] = []  # (t, policy, ratio)
+        # (t, policy, ratio, mean_group_latency) per closed window with
+        # enough samples; mean_group_latency aggregates the
+        # record_kernel_group feed (0.0 when no group samples landed)
+        self.history: List[Tuple[float, str, float, float]] = []
 
     # ------------------------------------------------------------------ #
     def record_request(self, now: float, request_latency: float,
@@ -66,6 +69,12 @@ class OnlineMonitor:
 
     def tick(self, now: float) -> None:
         """Advance workload time without a sample (idle windows)."""
+        if self._window_end is None:
+            # A group that is idle from the start only ever sees ticks;
+            # if they cannot open the first window, the monitor stays
+            # inert forever and never re-evaluates once load arrives.
+            self._window_end = now + self.cfg.window
+            return
         self._maybe_switch(now)
 
     # ------------------------------------------------------------------ #
@@ -87,7 +96,9 @@ class OnlineMonitor:
                 self.policy = target
                 self.switches += 1
                 self.stall_time += self.cfg.switch_stall
-            self.history.append((now, self.policy, ratio))
+            grp = (sum(self._win_groups) / len(self._win_groups)
+                   if self._win_groups else 0.0)
+            self.history.append((now, self.policy, ratio, grp))
         self._win_req.clear()
         self._win_exec.clear()
         self._win_groups.clear()

@@ -719,12 +719,41 @@ class ControlEvent:
 _EVENT_ORDER = {"fail": 0, "down": 1, "up": 2}
 
 
+@dataclasses.dataclass(frozen=True)
+class ControlSignals:
+    """Windowed cluster state handed to a deployment controller at each
+    decision epoch of :func:`simulate_deployment`.
+
+    Counters cover the epoch that just ended: ``arrivals`` fresh
+    requests, ``shed`` of them rejected at admission, ``slo_miss`` of
+    them admitted on a schedule that already misses an SLO component
+    (the DES commits whole schedules at routing time, so the miss is
+    known immediately).  Per-group vectors are indexed like the
+    deployment's groups: ``backlog``/``queue_len`` are instantaneous at
+    ``now``; ``util`` is the device-busy seconds *committed* during the
+    epoch over the epoch's device-seconds, clamped to [0, 1] (committed
+    work is the DES's analogue of measured occupancy); ``eligible`` is
+    the routability mask.
+    """
+    now: float
+    interval: float
+    arrivals: int
+    shed: int
+    slo_miss: int
+    backlog: Tuple[float, ...]
+    queue_len: Tuple[int, ...]
+    util: Tuple[float, ...]
+    eligible: Tuple[bool, ...]
+
+
 def simulate_deployment(replicas: Sequence[ReplicaModel],
                         trace: Sequence[ClusterRequest],
                         route_fn,
                         interconnect: Optional[Interconnect] = None,
                         kv_chunks: int = 1,
-                        timeline: Sequence[ControlEvent] = ()
+                        timeline: Sequence[ControlEvent] = (),
+                        controller=None,
+                        start_ineligible: Sequence[int] = ()
                         ) -> ClusterResult:
     """One DES entry point behind every serving surface.
 
@@ -756,18 +785,43 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     admission control or because no eligible group remains — counts in
     ``shed`` as always (it was never accepted).
 
-    Deterministic: identical (trace, plans, router, timeline) produce a
-    bit-identical event log.
+    ``controller`` closes the loop: an object exposing ``interval``
+    (decision-epoch seconds), ``begin(t0)``, ``decide(signals) ->
+    iterable[ControlEvent]`` and ``finish(t_end)`` (see
+    ``serving/controller.AutoscalePolicy``).  Every ``interval``
+    seconds of simulated time it receives a :class:`ControlSignals`
+    snapshot of the epoch just ended and may inject new control events
+    (at or after ``now``) into the live timeline — the same masking
+    machinery static timelines use.  ``start_ineligible`` lists groups
+    that begin masked with no pending "up" event (a controller's
+    parked reserve pool).
+
+    Deterministic: identical (trace, plans, router, timeline,
+    controller config) produce a bit-identical event log.
     """
     ic = interconnect or Interconnect()
-    evs = sorted(timeline,
-                 key=lambda e: (e.time, _EVENT_ORDER[e.kind], e.group))
-    for e in evs:
+    # Pending control events live in a heap so a controller can inject
+    # events mid-run; the (time, kind-order, group, seq) key reproduces
+    # the old sorted-list order exactly when nothing is injected.
+    pend: List[Tuple[float, int, int, int, ControlEvent]] = []
+    eseq = 0
+
+    def push_event(e: ControlEvent) -> None:
+        nonlocal eseq
         if e.group < 0 or e.group >= len(replicas):
             raise ValueError(f"control event {e} names group {e.group}; "
                              f"deployment has {len(replicas)}")
+        heapq.heappush(pend, (e.time, _EVENT_ORDER[e.kind], e.group,
+                              eseq, e))
+        eseq += 1
+
+    for e in sorted(timeline,
+                    key=lambda e: (e.time, _EVENT_ORDER[e.kind], e.group)):
+        push_event(e)
         if e.kind == "up":          # warm-up pending: starts masked
             replicas[e.group].eligible = False
+    for g in start_ineligible:
+        replicas[int(g)].eligible = False
     # Per-request mutable record, indexed by trace position.  "served"
     # records carry the request's CURRENT placement so a later failure
     # can find and re-route its victims.
@@ -844,13 +898,9 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                       "lat": finish - arrival0,
                       "ttft": ttft_abs - arrival0}
 
-    ei = 0
-
     def apply_events(upto: float) -> None:
-        nonlocal ei
-        while ei < len(evs) and evs[ei].time <= upto:
-            e = evs[ei]
-            ei += 1
+        while pend and pend[0][0] <= upto:
+            e = heapq.heappop(pend)[-1]
             rep = replicas[e.group]
             if e.kind == "up":
                 rep.eligible = True
@@ -885,9 +935,56 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                                                 arrival=e.time),
                          e.time, trace[i].arrival, fresh=False)
 
+    # ------------------------------------------------------------- #
+    # closed-loop control: every `interval` seconds of simulated time
+    # the controller sees the epoch's signals and may inject events
+    if controller is not None:
+        ctl_dt = float(getattr(controller, "interval", 0.0))
+        if ctl_dt <= 0.0:
+            raise ValueError("controller.interval must be > 0")
+        ctl_t0 = min((r.arrival for r in trace), default=0.0)
+        next_epoch = ctl_t0 + ctl_dt
+        busy_prev = [sum(r.dev_busy) for r in replicas]
+        ctl_counts = {"arrivals": 0, "shed": 0, "miss": 0}
+        controller.begin(ctl_t0)
+
+    def fire_epoch(te: float) -> None:
+        apply_events(te)
+        util = []
+        for gi, rep in enumerate(replicas):
+            busy = sum(rep.dev_busy)
+            cap = ctl_dt * rep.num_devices
+            util.append(min(1.0, max(0.0, (busy - busy_prev[gi]) / cap)))
+            busy_prev[gi] = busy
+        sig = ControlSignals(
+            now=te, interval=ctl_dt,
+            arrivals=ctl_counts["arrivals"], shed=ctl_counts["shed"],
+            slo_miss=ctl_counts["miss"],
+            backlog=tuple(r.backlog(te) for r in replicas),
+            queue_len=tuple(r.queue_len(te) for r in replicas),
+            util=tuple(util),
+            eligible=tuple(r.eligible for r in replicas))
+        ctl_counts.update(arrivals=0, shed=0, miss=0)
+        for ev in (controller.decide(sig) or ()):
+            if ev.time < te:
+                raise ValueError(f"controller event {ev} is in the "
+                                 f"past (now={te})")
+            push_event(ev)
+
     for i, req in enumerate(trace):
+        if controller is not None:
+            while next_epoch <= req.arrival:
+                fire_epoch(next_epoch)
+                next_epoch += ctl_dt
         apply_events(req.arrival)
         dispatch(i, req, req.arrival, req.arrival, fresh=True)
+        if controller is not None:
+            ctl_counts["arrivals"] += 1
+            rec = records[i]
+            if not rec["served"]:
+                ctl_counts["shed"] += 1
+            elif not _meets_slo(req, rec["lat"], rec["ttft"]):
+                ctl_counts["miss"] += 1
     apply_events(math.inf)          # events after the last arrival
 
     latencies: List[float] = []
@@ -906,6 +1003,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             slo_ok += 1
         max_finish = max(max_finish, rec["finish"])
     t0 = min((r.arrival for r in trace), default=0.0)
+    if controller is not None:
+        controller.finish(max(max_finish, t0))
     return ClusterResult(
         makespan=max_finish - t0 if trace else 0.0,
         completed=len(latencies),

@@ -656,6 +656,89 @@ class ServingEngine:
         return True
 
     # ------------------------------------------------------------------ #
+    # Live migration: drain / resume mid-decode sessions
+    # ------------------------------------------------------------------ #
+    def export_sessions(self, now: Optional[float] = None
+                        ) -> List[Tuple[Request, Dict[str, Any]]]:
+        """Drain this engine loss-free: settle the buffered window,
+        then package every still-resident session as a migration
+        handoff — the per-slot KV/recurrent state up to the current
+        decode position (``export_kv``) plus the decode cursor
+        (last sampled token, position, remaining budget) — and free
+        the slots.  Feed each item to a peer's :meth:`import_session`;
+        greedy decode continues bit-identically to never having moved
+        (same params, same cache contents, same cursor).
+        """
+        self.sync(now)
+        out: List[Tuple[Request, Dict[str, Any]]] = []
+        if not self._any_active():
+            return out
+        pos = np.asarray(self.pos)
+        last = np.asarray(self.last_tok)
+        budget = np.asarray(self.budget)
+        for slot in range(self.slots):
+            req = self.active[slot]
+            if req is None:
+                continue
+            state = M.export_kv(self.cfg, self.cache, slot,
+                                int(pos[slot]))
+            out.append((req, {
+                "rid": req.rid, "state": state,
+                "last_tok": int(last[slot]), "pos": int(pos[slot]),
+                "budget": int(budget[slot]),
+                "kv_bytes": M.kv_state_bytes(state), "done": False}))
+            self.active[slot] = None
+            self.active_mask = self.active_mask.at[slot].set(False)
+        self._recompute_remaining()
+        return out
+
+    def import_session(self, req: Request, handoff: Dict[str, Any],
+                       now: Optional[float] = None) -> bool:
+        """Resume a migrated mid-decode session (an
+        :meth:`export_sessions` item) on this engine.  Same slot
+        mechanics as :meth:`admit_handoff`, but the request's TTFT is
+        NOT restamped — its first token already streamed from the
+        source engine; migration moves the session, not the client's
+        clock.  Returns False when no slot is free (step/drain and
+        retry)."""
+        assert not handoff["done"], "finished session cannot migrate"
+        assert handoff["pos"] < self.max_len, \
+            "imported state exceeds this engine's max_len"
+        self.sync(now)
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        if not free:
+            return False
+        slot = free[0]
+        self.cache = M.import_kv(self.cfg, self.cache, slot,
+                                 handoff["state"])
+        self.pos = self.pos.at[slot].set(handoff["pos"])
+        self.last_tok = self.last_tok.at[slot].set(handoff["last_tok"])
+        self.budget = self.budget.at[slot].set(handoff["budget"])
+        self.active_mask = self.active_mask.at[slot].set(True)
+        self.active[slot] = req
+        self._recompute_remaining()
+        return True
+
+    def warmup(self) -> None:
+        """Prime the jitted prefill and fused decode step (the common
+        shape buckets) so a freshly scaled-in engine pays its compiles
+        BEFORE it is marked routable, not on the first real request.
+        Outputs are discarded; engine state is untouched (the decode
+        probe runs fully masked, and the position-0 rows it touches
+        are overwritten by any admission or import)."""
+        if self._prefill_custom is None:
+            cache1 = M.init_cache(self.cfg, 1, self.max_len)
+            logits, _ = self._prefill(
+                cache1, jnp.zeros((1, 8), jnp.int32),
+                jnp.asarray([7], jnp.int32))
+            jax.block_until_ready(logits)
+        if self._decode_custom is None:
+            out = self._step_fused(self.cache, self.last_tok, self.pos,
+                                   self.budget, self.active_mask,
+                                   self.key)
+            jax.block_until_ready(out[1])
+
+    # ------------------------------------------------------------------ #
     # Sync-free decode loop
     # ------------------------------------------------------------------ #
     def step(self, now: float) -> None:

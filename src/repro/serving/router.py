@@ -157,8 +157,11 @@ class JSEDRouter(Router):
             if home is not None and not getattr(replicas[home],
                                                 "eligible", True):
                 # the home group drained or died; its resident state is
-                # gone — the session re-homes on whatever JSED picks
-                del self._session_home[req.session]
+                # gone — the session re-homes on whatever JSED picks.
+                # The stale entry is only dropped once the request is
+                # actually ADMITTED: a shed must leave session state
+                # untouched, or one rejected turn silently strips
+                # affinity from every later turn of the session.
                 home = None
             if home is not None:
                 stay_cost = replicas[home].backlog(now)
@@ -170,8 +173,8 @@ class JSEDRouter(Router):
         # past admission control
         if self._shed(req, replicas[choice], now):
             return -1
-        if req.session is not None and choice == best:
-            self._session_home[req.session] = best
+        if req.session is not None:
+            self._session_home[req.session] = choice
         return choice
 
 
@@ -309,12 +312,16 @@ class PDRouter(Router):
             pre_pool = dec_pool
         if not dec_pool:
             dec_pool = pre_pool
+        # A stale or abandoned home is only dropped once the request is
+        # actually ADMITTED — shedding a request must leave session
+        # state untouched (same invariant as JSEDRouter.route).
+        drop_home = False
         if self.session_affinity and req.session is not None:
             home = self._session_decode.get(req.session)
             if home is not None and not getattr(replicas[home],
                                                 "eligible", True):
                 # resident state left with the group; re-split afresh
-                del self._session_decode[req.session]
+                drop_home = True
                 home = None
             if home is not None:
                 stay = replicas[home].backlog(now)
@@ -338,10 +345,12 @@ class PDRouter(Router):
                             return -1
                     self.transfers_avoided += 1
                     return home
-                del self._session_decode[req.session]   # migrate
+                drop_home = True                        # migrate
         p = self._best(pre_pool, req, replicas, now, "prefill")
         d = self._best(dec_pool, req, replicas, now, "decode")
         if p == d:
+            if drop_home:
+                del self._session_decode[req.session]
             return p
         # rate matching: delay prefill admission by the decode group's
         # backlog beyond the tolerated lag, so prefill production tracks

@@ -47,7 +47,10 @@ class SizingResult:
     result: ClusterResult               # DES result of the best spec
     seed_score: float                   # greedy seed's score
     evals: int                          # distinct compositions scored
-    history: List[Tuple[int, float, float]]  # (iter, candidate, best)
+    # (iter, candidate, best) — exactly iters + 1 rows, one per
+    # iteration including the seed; infeasible mutations carry the
+    # incumbent score forward instead of dropping the row
+    history: List[Tuple[int, float, float]]
 
     @property
     def composition(self) -> List[List[str]]:
@@ -213,6 +216,11 @@ def search_composition(inventory: Dict[str, int], budget: float,
         T = temperature * (1.0 - it / (iters + 1))
         cand = mutate(cur)
         if cand is None:
+            # infeasible mutation: nothing was scored, but the row is
+            # still recorded (candidate column carries the incumbent,
+            # best column carries best_score) so history is always
+            # iters + 1 rows and indices align with the iteration count
+            history.append((it, cur_score, best_score))
             continue
         s, _, _ = evaluate(cand)
         rel = (s - cur_score) / max(cur_score, 1e-12)

@@ -48,8 +48,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CATALOG, Calibration, calibrate
 from repro.core.monitor import MonitorConfig
-from repro.core.simulator import (ClusterResult, ControlEvent,
-                                  Interconnect, simulate_deployment)
+from repro.core.simulator import (_EVENT_ORDER, ClusterResult,
+                                  ControlEvent, Interconnect,
+                                  simulate_deployment)
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import ROUTERS, make_router
 from repro.serving.workload import WorkloadRequest, assign_slos
@@ -233,6 +234,10 @@ class Deployment:
         self._cluster: Optional[TesseraCluster] = None
         self._timeline: List[ControlEvent] = []
         self._extra_groups: List[List[str]] = []
+        self._reserve: set = set()      # parked group indices (see
+        #                                 add_reserve): planned, unbilled,
+        #                                 ineligible until a controller
+        #                                 activates them
 
     # ------------------------------------------------------------------ #
     @property
@@ -242,9 +247,15 @@ class Deployment:
     @property
     def price_rate(self) -> float:
         """$/hr including scaled-in groups (drained groups still count:
-        the spec does not model partial-hour billing)."""
+        the spec does not model partial-hour billing).  Parked reserve
+        groups are excluded — they accrue nothing until a controller
+        activates them, and elastic runs bill time-weighted through
+        ``AutoscalePolicy.billed_dollars``."""
+        n0 = len(self.spec.groups)
         return self.spec.price_rate + sum(
-            CATALOG[n].price for g in self._extra_groups for n in g)
+            CATALOG[n].price
+            for k, g in enumerate(self._extra_groups)
+            if n0 + k not in self._reserve for n in g)
 
     def _resolved(self, group: Sequence[str]):
         cal = self.spec.calibration_model()
@@ -311,13 +322,21 @@ class Deployment:
         — emergency capacity beyond the provisioning budget is an
         operator decision the spec cannot veto; :attr:`price_rate`
         reports the honest post-scale rate.
+
+        Draining the ONLY eligible group is rejected: the scheduled
+        timeline is replayed to ``at`` and the call raises when the
+        removals would leave nothing routable (adds in the same call
+        count if their warm-up completes by ``at``) — every arrival
+        after such a drain would be shed, which is never what an
+        autoscaler meant.  Schedule the replacement first, or later.
         """
+        removals = []
         for g in (remove or []):
             g = int(g)
             if not 0 <= g < self.num_groups:
                 raise ValueError(f"cannot remove group {g}; deployment "
                                  f"has {self.num_groups}")
-            self._timeline.append(ControlEvent(float(at), "down", g))
+            removals.append(g)
         for group in (add or []):
             for name in group:
                 if name not in CATALOG:
@@ -329,12 +348,62 @@ class Deployment:
                 self._cluster.add_groups([self._resolved(group)])
             self._timeline.append(
                 ControlEvent(float(at) + float(warmup), "up", idx))
+        if removals:
+            left = self._eligible_at(float(at)) - set(removals)
+            if not left:
+                raise ValueError(
+                    f"scale(remove={removals}) would leave no eligible "
+                    f"group at t={float(at)}; scale up first (or give "
+                    f"the drain a later `at`)")
+            for g in removals:
+                self._timeline.append(ControlEvent(float(at), "down", g))
         return self
+
+    def _eligible_at(self, t: float) -> set:
+        """Which groups the scheduled timeline leaves routable at
+        ``t``: reserve groups park, groups with a pending "up" start
+        masked, then events at or before ``t`` replay in DES order."""
+        pend_up = {e.group for e in self._timeline if e.kind == "up"}
+        elig = {g for g in range(self.num_groups)
+                if g not in self._reserve and g not in pend_up}
+        for e in sorted(self._timeline, key=lambda e:
+                        (e.time, _EVENT_ORDER[e.kind], e.group)):
+            if e.time > t:
+                break
+            if e.kind == "up":
+                elig.add(e.group)
+            else:
+                elig.discard(e.group)
+        return elig
+
+    # ------------------------------------------------------------------ #
+    def add_reserve(self, groups: Sequence[Sequence[str]]) -> List[int]:
+        """Provision parked reserve groups for a controller.
+
+        Each group is planned immediately (plan-cache backed) but
+        starts ineligible with no scheduled warm-up and accrues no
+        cost: only a controller activation (an "up" control event)
+        makes it routable and starts its billing clock.  Returns the
+        new group indices.
+        """
+        idxs: List[int] = []
+        for group in (groups or []):
+            for name in group:
+                if name not in CATALOG:
+                    raise ValueError(f"unknown device {name!r}; "
+                                     f"pick from {sorted(CATALOG)}")
+            idx = self.num_groups
+            self._extra_groups.append(list(group))
+            self._reserve.add(idx)
+            if self._cluster is not None:
+                self._cluster.add_groups([self._resolved(group)])
+            idxs.append(idx)
+        return idxs
 
     # ------------------------------------------------------------------ #
     def simulate(self, trace: Sequence[WorkloadRequest], *,
                  failures: Optional[Sequence[Tuple[float, int]]] = None,
-                 router=None) -> ClusterResult:
+                 router=None, controller=None) -> ClusterResult:
         """Replay an open-loop trace on the DES backend.
 
         ``failures=[(t, group_idx), ...]`` hard-kills groups mid-trace
@@ -346,8 +415,16 @@ class Deployment:
         per call so no routing state leaks between replays.  When the
         spec declares ``slos`` they are stamped onto the trace
         (overriding any the trace already carried).
+
+        ``controller`` (a ``serving.controller.AutoscalePolicy``)
+        closes the loop: it is bound to this deployment (provisioning
+        its parked reserve pool on first use), observes windowed DES
+        signals every ``controller.interval`` simulated seconds, and
+        injects scale up/down events into the live timeline.
         """
         cluster = self.cluster()
+        if controller is not None:
+            controller.bind(self)
         if self.spec.slos:
             trace = assign_slos(trace, **self.spec.slos)
         timeline = list(self._timeline)
@@ -363,7 +440,9 @@ class Deployment:
             cluster.build_replicas(), creqs, router or self._router(),
             interconnect=cluster.interconnect,
             kv_chunks=self.spec.kv_chunks,
-            timeline=timeline)
+            timeline=timeline,
+            controller=controller,
+            start_ineligible=sorted(self._reserve))
 
     # ------------------------------------------------------------------ #
     def launch(self, cfg=None, params=None) -> "LaunchedDeployment":
@@ -413,6 +492,7 @@ class LaunchedDeployment:
         self.params = params
         self.wire_bytes = 0
         self.shards = 0
+        self.migrations = 0
         ekw = spec.engine
         self.max_len = int(ekw.get("max_len", 64))
         common = dict(slots=int(ekw.get("slots", 4)),
@@ -420,6 +500,8 @@ class LaunchedDeployment:
                       temperature=float(ekw.get("temperature", 0.0)),
                       seed=int(ekw.get("seed", 0)))
         sync_every = int(ekw.get("sync_every", 4))
+        self._engine_kw = dict(common, sync_every=sync_every)
+        self._actions: List[Dict[str, Any]] = []
         if spec.pd:
             chunk = (max(1, math.ceil(self.max_len / spec.kv_chunks))
                      if spec.kv_chunks > 1 else None)
@@ -431,9 +513,160 @@ class LaunchedDeployment:
                                                **common)
             self.engines = [self.prefill_engine, self.decode_engine]
         else:
-            self.engine = ServingEngine(cfg, params,
-                                        sync_every=sync_every, **common)
-            self.engines = [self.engine]
+            # one colocated engine per replica group: the pool the
+            # live scale() drains / grows
+            self.engines = [ServingEngine(cfg, params, **self._engine_kw)
+                            for _ in spec.groups]
+            self.engine = self.engines[0]
+            self._routable = [True] * len(self.engines)
+
+    # ------------------------------------------------------------------ #
+    def scale(self, *, add: Optional[Sequence[Sequence[str]]] = None,
+              remove: Optional[Sequence[int]] = None,
+              at: float = 0.0, warmup: float = 0.0
+              ) -> "LaunchedDeployment":
+        """Schedule runtime autoscaling on the REAL engine pool — the
+        same decision surface as ``Deployment.scale``, executed during
+        the next :meth:`run`.
+
+        ``remove``: engine indices that drain at ``at`` seconds into
+        the run — the engine stops taking admissions, every resident
+        mid-decode session is exported (``export_sessions``) and
+        re-imported into a surviving engine (``import_session``), so
+        no accepted request is dropped and greedy tokens are
+        bit-identical to never having moved.  ``add``: device-name
+        lists (cosmetic here — every launch engine runs the same local
+        model) whose engines are built at ``at + warmup`` and
+        jit-primed (``ServingEngine.warmup``) BEFORE they become
+        routable; warm-up is real compile work on this backend, so
+        ``warmup`` only delays when it starts.  Only the colocated
+        pool scales (``pd=False``); the PD pair is a fixed topology.
+
+        Removing every routable engine is rejected up front: the
+        scheduled actions are replayed (adds count at their start
+        time) and the call raises if any drain would leave nothing
+        routable — schedule the replacement at or before the drain.
+        """
+        if self.spec.pd:
+            raise ValueError("live scale() drives the colocated engine "
+                             "pool; the pd=True prefill/decode pair is "
+                             "a fixed topology")
+        adds = [list(g) for g in (add or [])]
+        for group in adds:
+            for name in group:
+                if name not in CATALOG:
+                    raise ValueError(f"unknown device {name!r}; "
+                                     f"pick from {sorted(CATALOG)}")
+        n_total = len(self.engines) + sum(
+            1 for a in self._actions if a["kind"] == "add") + len(adds)
+        removals = []
+        for g in (remove or []):
+            g = int(g)
+            if not 0 <= g < n_total or g in removals:
+                raise ValueError(f"cannot remove engine {g}; pool has "
+                                 f"{n_total} (scheduled adds included) "
+                                 f"and repeats are not allowed")
+            removals.append(g)
+        planned = sorted(
+            self._actions
+            + [{"at": float(at) + float(warmup), "kind": "add"}
+               for _ in adds]
+            + [{"at": float(at), "kind": "remove", "group": g}
+               for g in removals],
+            key=lambda a: (a["at"], 0 if a["kind"] == "add" else 1))
+        routable = sum(self._routable)
+        for a in planned:
+            routable += 1 if a["kind"] == "add" else -1
+            if routable < 1:
+                raise ValueError(
+                    f"scale(remove={removals}) would drain the last "
+                    f"routable engine at t={float(at)}; scale up first "
+                    f"(or give the drain a later `at`)")
+        self._actions = planned
+        return self
+
+    def _pick_engine(self):
+        """The routable engine with the most free slots (host view;
+        conservative between syncs), or None when every one is full."""
+        best, best_free = None, 0
+        for j, eng in enumerate(self.engines):
+            if not self._routable[j]:
+                continue
+            free = eng.active.count(None)
+            if free > best_free:
+                best, best_free = eng, free
+        return best
+
+    def _apply_action(self, act: Dict[str, Any], clk) -> None:
+        if act["kind"] == "add":
+            from repro.serving.engine import ServingEngine
+            eng = ServingEngine(self.cfg, self.params, **self._engine_kw)
+            eng.warmup()        # compiles primed BEFORE routable flips
+            self.engines.append(eng)
+            self._routable.append(True)
+            return
+        g = act["group"]
+        self._routable[g] = False     # no new admissions from here on
+        for req, h in self.engines[g].export_sessions(clk()):
+            self.wire_bytes += h["kv_bytes"]
+            self.migrations += 1
+            while True:
+                tgt = self._pick_engine()
+                if tgt is not None and tgt.import_session(req, h, clk()):
+                    break
+                # every routable engine full: drain one decode step
+                # everywhere and retry — a slot frees in finitely many
+                # steps because resident budgets are finite
+                for eng in self.engines:
+                    eng.step(clk())
+
+    def _run_pool(self, requests: Sequence) -> Dict[str, Any]:
+        """Elastic multi-engine run: admit due arrivals to the
+        least-loaded routable engine, apply due scale actions (AFTER
+        admission, so an ``at=0`` drain deterministically exercises
+        in-flight migration), step every engine with resident work."""
+        t0 = time.perf_counter()
+
+        def clk() -> float:
+            return time.perf_counter() - t0
+
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        acts = list(self._actions)
+        self._actions = []
+        while pending or acts or any(e._any_active()
+                                     for e in self.engines):
+            now = clk()
+            while pending and pending[0].arrival <= now:
+                eng = self._pick_engine()
+                if eng is None:
+                    break               # pool full; step below drains
+                eng.admit_batch([pending.pop(0)], clk())
+            while acts and acts[0]["at"] <= now:
+                self._apply_action(acts.pop(0), clk)
+            stepped = False
+            for eng in self.engines:
+                if eng._any_active():
+                    eng.step(clk())
+                    stepped = True
+            if not stepped:
+                due = [r.arrival for r in pending[:1]] \
+                    + [a["at"] for a in acts[:1]]
+                if due:
+                    time.sleep(min(0.05, max(0.0, min(due) - clk())))
+        for eng in self.engines:
+            eng.sync(clk())
+        summaries = [e.stats.summary() for e in self.engines]
+        agg = {k: sum(s[k] for s in summaries)
+               for k in ("completed", "decode_steps", "host_syncs",
+                         "prefill_batches")}
+        done = sum(s["completed"] for s in summaries)
+        for k in ("mean_ttft", "mean_tpot", "mean_norm_latency"):
+            agg[k] = (sum(s[k] * s["completed"] for s in summaries)
+                      / done if done else 0.0)
+        return {"engine": agg, "engines": summaries,
+                "wire_bytes": self.wire_bytes, "shards": self.shards,
+                "migrations": self.migrations,
+                "routable": list(self._routable)}
 
     # ------------------------------------------------------------------ #
     def _counted(self, gen):
@@ -449,9 +682,12 @@ class LaunchedDeployment:
         dict; for a PD pair the decode engine's stats are the
         user-visible ones (it streams every token)."""
         if not self.spec.pd:
-            stats = self.engine.run(list(requests))
-            return {"engine": stats.summary(), "wire_bytes": 0,
-                    "shards": 0}
+            if len(self.engines) == 1 and not self._actions:
+                # solo fast path: identical to the pre-elastic backend
+                stats = self.engine.run(list(requests))
+                return {"engine": stats.summary(), "wire_bytes": 0,
+                        "shards": 0}
+            return self._run_pool(requests)
         t0 = time.perf_counter()
         pre, dec = self.prefill_engine, self.decode_engine
 

@@ -114,6 +114,41 @@ def test_monitor_idle_gap_no_switch_storm():
     assert len(mon.history) == 1
 
 
+def test_monitor_tick_opens_first_window_when_idle_at_start():
+    """Regression: a group that is idle from t=0 only ever sees
+    tick()s.  tick() must open the first window; before the fix it
+    no-opped until the first record_request, so the boundary anchored
+    at the first SAMPLE and the monitor re-evaluated one full window
+    late (here: no switch by t=1.05 despite a 10x queueing ratio)."""
+    mon = OnlineMonitor(MonitorConfig(window=1.0, beta=1.5))
+    mon.tick(0.0)                      # idle start: opens [0, 1)
+    for i in range(5):
+        mon.record_request(now=0.2 + 0.1 * i, request_latency=1.0,
+                           exec_latency=0.1)      # ratio 10 >> beta
+    mon.tick(1.05)                     # crosses the tick-opened boundary
+    assert mon.policy == "throughput"
+    assert mon.switches == 1
+
+
+def test_monitor_history_reports_mean_group_latency():
+    """Regression: record_kernel_group() samples were collected and
+    silently discarded at every window close.  Each history row must
+    expose their per-window mean (the paper's monitoring unit)."""
+    mon = OnlineMonitor(MonitorConfig(window=1.0, beta=1.5))
+    mon.record_request(now=0.1, request_latency=1.0, exec_latency=0.1)
+    mon.record_kernel_group(0.004)
+    mon.record_kernel_group(0.008)
+    mon.tick(1.2)
+    assert len(mon.history) == 1
+    _, _, _, grp = mon.history[-1]
+    assert grp == pytest.approx(0.006)
+    # a window with no group samples reports 0.0, and the buffer from
+    # the first window must not leak into it
+    mon.record_request(now=1.5, request_latency=1.0, exec_latency=0.1)
+    mon.tick(2.5)
+    assert mon.history[-1][3] == 0.0
+
+
 def test_monitor_aggressive_beta_switches_more():
     def run(beta):
         mon = OnlineMonitor(MonitorConfig(window=0.5, beta=beta))

@@ -240,3 +240,70 @@ def test_property_cluster_completes_all(het_cluster, seed, n_req, kind):
     assert all(l >= 0 for l in res.latencies)
     assert all(0 <= a < 3 for a in res.assignments)
     assert len(res.events) >= n_req
+
+
+# ===================================================================== #
+# Shed / affinity interleaving (regression: a shed must not mutate
+# session state)
+# ===================================================================== #
+class _StubReplica:
+    """Minimal ReplicaModel surface the routers read."""
+
+    def __init__(self, backlog=0.0, service=1.0, eligible=True):
+        self._backlog = backlog
+        self._service = service
+        self.eligible = eligible
+
+    def backlog(self, now):
+        return self._backlog
+
+    def predicted_service(self, req):
+        return self._service
+
+    def predicted_phase_service(self, req, phase):
+        return self._service / 2.0
+
+
+def test_jsed_shed_leaves_session_home_unchanged():
+    """Regression: when a session's home group drained, JSED dropped
+    the home entry BEFORE admission control ran — one shed turn
+    silently stripped affinity from every later turn of the session."""
+    router = JSEDRouter(slo_shed=True)
+    reps = [_StubReplica(service=1.0), _StubReplica(service=2.0)]
+    first = ClusterRequest(rid=0, arrival=0.0, session=7, slo=100.0)
+    assert router.route(first, reps, 0.0) == 0
+    assert router._session_home[7] == 0
+    reps[0].eligible = False           # home drains
+    doomed = ClusterRequest(rid=1, arrival=1.0, session=7, slo=1e-6)
+    assert router.route(doomed, reps, 1.0) == -1          # shed
+    assert router._session_home[7] == 0, \
+        "shed request mutated session affinity"
+    # the home only moves when a request is actually ADMITTED
+    ok = ClusterRequest(rid=2, arrival=2.0, session=7, slo=100.0)
+    assert router.route(ok, reps, 2.0) == 1
+    assert router._session_home[7] == 1
+
+
+def test_pd_shed_leaves_session_decode_home_unchanged():
+    """Regression: the PD router deleted a session's decode home on the
+    migrate (and stale-home) path before the SLO check could shed the
+    request — same invariant as JSED: shed leaves state untouched."""
+    from repro.serving.router import PDRouter
+    router = PDRouter(prefill_pool=[0], decode_pool=[1, 2],
+                      slo_shed=True, session_affinity=True,
+                      affinity_break=1.0)
+    reps = [_StubReplica(service=0.1),
+            _StubReplica(backlog=10.0, service=0.1),   # overloaded home
+            _StubReplica(service=0.1)]
+    router._session_decode[5] = 1
+    # stay - best = 10 > affinity_break -> migrate path; impossible SLO
+    # -> shed.  The home entry must survive the shed.
+    doomed = ClusterRequest(rid=0, arrival=0.0, session=5, slo=1e-6)
+    assert router.route(doomed, reps, 0.0) == -1
+    assert router._session_decode[5] == 1, \
+        "shed request mutated PD session home"
+    # an admitted follow-up re-homes onto the migration target
+    ok = ClusterRequest(rid=1, arrival=1.0, session=5, slo=100.0)
+    out = router.route(ok, reps, 1.0)
+    assert isinstance(out, tuple) and out[1] == 2
+    assert router._session_decode[5] == 2

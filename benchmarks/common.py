@@ -15,10 +15,13 @@ scaled by ``n_out`` for the planner; the simulator replays decode stages
 from __future__ import annotations
 
 import argparse
+import contextlib
+import cProfile
 import dataclasses
 import json
+import pstats
 import sys
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +53,29 @@ def bench_parser(description: str = "",
                     help="write machine-readable results")
     if check_help is not None:
         ap.add_argument("--check", action="store_true", help=check_help)
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the measured runs in cProfile and print "
+                         "the top-20 cumulative entries")
     return ap
+
+
+@contextlib.contextmanager
+def maybe_profile(enabled: bool) -> Iterator[None]:
+    """``with maybe_profile(args.profile): ...`` around the measured
+    section.  No-op (zero overhead) unless ``--profile`` was given —
+    profiled timings are for finding hotspots, not for reporting, so
+    benchmarks should still print their numbers from unprofiled runs
+    where possible."""
+    if not enabled:
+        yield
+        return
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        yield
+    finally:
+        prof.disable()
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(20)
 
 
 def print_rows(rows: Sequence[Row]) -> None:

@@ -44,9 +44,14 @@ class OnlineMonitor:
         self.policy = initial_policy
         self.switches = 0
         self.stall_time = 0.0
-        self._win_req: List[float] = []
-        self._win_exec: List[float] = []
-        self._win_groups: List[float] = []
+        # O(1) incremental window accumulators (running sums in sample
+        # order are bit-identical to summing the historical per-window
+        # lists left-to-right, and drop the per-window list rebuilds)
+        self._req_n = 0
+        self._req_sum = 0.0
+        self._exec_sum = 0.0
+        self._grp_n = 0
+        self._grp_sum = 0.0
         self._window_end: Optional[float] = None
         # (t, policy, ratio, mean_group_latency) per closed window with
         # enough samples; mean_group_latency aggregates the
@@ -58,14 +63,17 @@ class OnlineMonitor:
                        exec_latency: float) -> None:
         if self._window_end is None:
             self._window_end = now + self.cfg.window
-        self._win_req.append(request_latency)
-        self._win_exec.append(exec_latency)
-        self._maybe_switch(now)
+        self._req_n += 1
+        self._req_sum += request_latency
+        self._exec_sum += exec_latency
+        if now >= self._window_end:    # _maybe_switch guard, hoisted
+            self._maybe_switch(now)
 
     def record_kernel_group(self, seconds: float) -> None:
         """Latency of a kernel group = span between consecutive
         communication ops (cheap monitoring unit, paper §III-D)."""
-        self._win_groups.append(seconds)
+        self._grp_n += 1
+        self._grp_sum += seconds
 
     def tick(self, now: float) -> None:
         """Advance workload time without a sample (idle windows)."""
@@ -81,9 +89,9 @@ class OnlineMonitor:
     def _maybe_switch(self, now: float) -> None:
         if self._window_end is None or now < self._window_end:
             return
-        if len(self._win_req) >= self.cfg.min_samples:
-            ratio = (sum(self._win_req) / len(self._win_req)) / max(
-                sum(self._win_exec) / len(self._win_exec), 1e-12)
+        if self._req_n >= self.cfg.min_samples:
+            n = self._req_n
+            ratio = (self._req_sum / n) / max(self._exec_sum / n, 1e-12)
             up = self.cfg.beta * (1.0 + self.cfg.hysteresis)
             down = self.cfg.beta * (1.0 - self.cfg.hysteresis)
             if ratio > up:
@@ -96,12 +104,13 @@ class OnlineMonitor:
                 self.policy = target
                 self.switches += 1
                 self.stall_time += self.cfg.switch_stall
-            grp = (sum(self._win_groups) / len(self._win_groups)
-                   if self._win_groups else 0.0)
+            grp = (self._grp_sum / self._grp_n if self._grp_n else 0.0)
             self.history.append((now, self.policy, ratio, grp))
-        self._win_req.clear()
-        self._win_exec.clear()
-        self._win_groups.clear()
+        self._req_n = 0
+        self._req_sum = 0.0
+        self._exec_sum = 0.0
+        self._grp_n = 0
+        self._grp_sum = 0.0
         # advance in whole windows so long gaps don't cause switch storms
         k = max(1, int((now - self._window_end) / self.cfg.window) + 1)
         self._window_end += k * self.cfg.window

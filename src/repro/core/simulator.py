@@ -22,7 +22,10 @@ import dataclasses
 import heapq
 import math
 import random
+from itertools import repeat
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.graph import KernelGraph
 from repro.core.planner import Plan
@@ -375,6 +378,212 @@ def replica_units(graph: KernelGraph, plan: Plan, devices,
     return units
 
 
+class UnitProgram:
+    """Compiled structure-of-arrays form of one stage-unit list.
+
+    ``ReplicaUnit.scaled`` is affine in ``(scale_prompt,
+    scale_output)``, so a whole unit list reduces to three preallocated
+    float64 arrays (duration, decode fraction, prefill fraction) plus
+    the per-unit ``(kind, device)`` routing the walk needs.  Two things
+    fall out of the compilation:
+
+      * ``predicted_service`` / ``predicted_phase_service`` become the
+        cached dot products ``sp * svc_pre + so * svc_dec`` — O(1) per
+        routing probe instead of re-summing the unit list for every
+        candidate group of every request;
+      * the walk's per-unit durations come from ONE elementwise numpy
+        expression over the arrays (``dur * (frac*so + omf*sp)``),
+        which is bit-identical to calling ``scaled`` per unit because
+        float64 ufuncs apply the same IEEE operations elementwise.
+
+    Small unit lists (the common case: a handful of plan stages) fall
+    below numpy's per-call overhead, so the walk evaluates the same
+    affine expression in scalar Python under ``_VECTOR_MIN`` units —
+    identical bits either way.
+
+    Programs are cached process-wide by unit-list *content* (not
+    identity — list ids can be recycled), so sizing-search candidates
+    that share group templates reuse compiled programs across every
+    DES replay.
+    """
+
+    __slots__ = ("n", "dur", "frac", "omf", "steps", "svc_pre",
+                 "svc_dec", "_walk_plans")
+
+    def __init__(self, units: Sequence[ReplicaUnit]):
+        self._walk_plans: Dict[str, _WalkPlan] = {}
+        self.n = len(units)
+        self.dur = np.array([u.duration for u in units],
+                            dtype=np.float64)
+        self.frac = np.array([u.decode_frac for u in units],
+                             dtype=np.float64)
+        self.omf = 1.0 - self.frac      # prefill fraction, elementwise
+        # (kind, device, has_prefill_share, duration, frac, omf) —
+        # plain tuples so the scheduling loop stays attribute-free
+        self.steps = [(u.kind, u.device, u.decode_frac < 1.0,
+                       u.duration, u.decode_frac, 1.0 - u.decode_frac)
+                      for u in units]
+        # predicted_service(sp, so) == sp * svc_pre + so * svc_dec
+        self.svc_pre = float(np.dot(self.dur, self.omf))
+        self.svc_dec = float(np.dot(self.dur, self.frac))
+
+    def service(self, sp: float, so: float) -> float:
+        return sp * self.svc_pre + so * self.svc_dec
+
+    def durations(self, sp: float, so: float) -> List[float]:
+        """Per-unit ``scaled(sp, so)``, bit-identical to the loop."""
+        if self.n < _VECTOR_MIN:
+            return [d * (f * so + o * sp)
+                    for _, _, _, d, f, o in self.steps]
+        return (self.dur * (self.frac * so + self.omf * sp)).tolist()
+
+    def walk_plan(self, phase: str) -> "_WalkPlan":
+        wp = self._walk_plans.get(phase)
+        if wp is None:
+            wp = self._walk_plans[phase] = _WalkPlan(self, phase)
+        return wp
+
+
+class _WalkPlan:
+    """Request-independent structure of one program's walk for one
+    phase: which units run, and where the walk can actually *wait*.
+
+    Along a walk the clock ``t`` is strictly increasing (every active
+    unit has ``dur > 0``), and a resource's free timeline is only
+    rewritten BY this walk to the then-current ``t``.  So ``max(t,
+    free)`` can exceed ``t`` only at the FIRST active unit of each
+    ``(kind, device)`` resource — everywhere else it returns ``t``
+    exactly.  That turns the per-unit scheduling loop into one seeded
+    ``np.cumsum`` per resource segment (numpy's cumsum accumulates
+    sequentially, so the ends match the reference walk's chain of
+    additions bit-for-bit), with busy/aggregate accumulators seeded the
+    same way.
+
+    Which units are active is request-independent: phase scales are
+    strictly positive for the phases a request carries, so ``scaled(sp,
+    so) > 0`` reduces to a predicate on the unit's stored duration and
+    decode fraction.
+    """
+
+    __slots__ = ("n", "dur", "frac", "omf", "kinds", "devs",
+                 "seg_bounds", "seg_res", "res_groups",
+                 "pe_pos", "pe_dur", "pe_frac", "pe_omf")
+
+    def __init__(self, prog: UnitProgram, phase: str):
+        if phase == "prefill":          # so == 0: runs iff omf > 0
+            mask = (prog.dur > 0.0) & (prog.omf > 0.0)
+        elif phase == "decode":         # sp == 0: runs iff frac > 0
+            mask = (prog.dur > 0.0) & (prog.frac > 0.0)
+        else:                           # sp, so > 0: runs iff dur > 0
+            mask = prog.dur > 0.0
+        idx = np.nonzero(mask)[0]
+        self.n = int(len(idx))
+        self.dur = prog.dur[idx]
+        self.frac = prog.frac[idx]
+        self.omf = prog.omf[idx]
+        steps = [prog.steps[i] for i in idx.tolist()]
+        self.kinds = [s[0] for s in steps]
+        self.devs = [s[1] for s in steps]
+        # segment boundaries: a new segment at the first active
+        # occurrence of each (kind, device) resource
+        seg_bounds: List[int] = []
+        seg_res: List[Tuple[int, int]] = []
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for p, r in enumerate(zip(self.kinds, self.devs)):
+            ps = groups.get(r)
+            if ps is None:
+                groups[r] = [p]
+                seg_bounds.append(p)
+                seg_res.append(r)
+            else:
+                ps.append(p)
+        seg_bounds.append(self.n)
+        self.seg_bounds = seg_bounds
+        self.seg_res = seg_res
+        # per-resource positions (busy/free/aggregate updates)
+        self.res_groups = [
+            (k, d, np.asarray(ps, dtype=np.intp), ps[-1], len(ps))
+            for (k, d), ps in groups.items()]
+        # last active unit with a prefill share (TTFT anchor)
+        pe = [p for p in range(self.n) if self.frac[p] < 1.0]
+        if pe:
+            self.pe_pos = pe[-1]
+            self.pe_dur = float(self.dur[self.pe_pos])
+            self.pe_frac = float(self.frac[self.pe_pos])
+            self.pe_omf = float(self.omf[self.pe_pos])
+        else:
+            self.pe_pos = -1
+            self.pe_dur = self.pe_frac = self.pe_omf = 0.0
+
+
+#: below this many units the scalar path beats numpy's call overhead
+_VECTOR_MIN = 24
+
+#: below this many ACTIVE units the scalar walk loop beats the
+#: segmented-cumsum walk's fixed numpy call overhead
+_VECTOR_WALK_MIN = 48
+
+_PROGRAM_CACHE: Dict[Tuple, UnitProgram] = {}
+
+
+def compile_units(units: Sequence[ReplicaUnit]) -> UnitProgram:
+    """Content-keyed process-wide program cache (plan-cache idiom)."""
+    key = tuple((u.kind, u.device, u.duration, u.decode_frac)
+                for u in units)
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is None:
+        prog = _PROGRAM_CACHE[key] = UnitProgram(units)
+    return prog
+
+
+@dataclasses.dataclass
+class EventAggregate:
+    """Reduction of a full event log: per ``(replica, kind, device)``
+    dispatch counts and busy seconds.
+
+    ``events="agg"`` runs keep exactly this instead of the per-unit
+    tuple list (the tuples dominate memory at 1M requests); the
+    accumulation order matches the append order of a full log, and each
+    event contributes ``t1 - t0`` (not its pre-rounding duration), so
+    ``EventAggregate.from_events(full_log)`` equals the aggregate an
+    ``events="agg"`` run produced — bit-identically (tested).
+
+    KV transfers aggregate under ``(dst_replica, KV_TRANSFER,
+    src_replica)``, mirroring their event-tuple layout.
+    """
+
+    counts: Dict[Tuple[int, int, int], int] = \
+        dataclasses.field(default_factory=dict)
+    seconds: Dict[Tuple[int, int, int], float] = \
+        dataclasses.field(default_factory=dict)
+
+    def add(self, rep: int, kind: int, dev: int,
+            t0: float, t1: float) -> None:
+        key = (rep, kind, dev)
+        counts = self.counts
+        if key in counts:
+            counts[key] += 1
+            self.seconds[key] += t1 - t0
+        else:
+            counts[key] = 1
+            self.seconds[key] = t1 - t0
+
+    @property
+    def total_events(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.seconds.values())
+
+    @classmethod
+    def from_events(cls, events: Sequence[Tuple]) -> "EventAggregate":
+        agg = cls()
+        for rep, _rid, kind, dev, t0, t1 in events:
+            agg.add(rep, kind, dev, t0, t1)
+        return agg
+
+
 class ReplicaModel:
     """Incremental discrete-event model of one replica.
 
@@ -383,6 +592,20 @@ class ReplicaModel:
     scheduling decisions with queue evolution.  Each resource is a FCFS
     server; a submitted request walks its stage units in topological
     order, starting each unit at max(previous unit end, resource free).
+
+    Two walk implementations share this state:
+
+      * the default fast path executes the compiled
+        :class:`UnitProgram` (scoring via cached dot products, O(1)
+        ``backlog`` from a running free-timeline maximum),
+      * ``reference=True`` restores the historical per-unit object walk
+        (``_run_units_reference``), O(n) scoring and O(n) backlog scans
+        — the honest "before" for benchmarks and the oracle the parity
+        suite checks bit-identical event logs against.
+
+    ``track_inflight=False`` drops the per-request finish-heap push
+    (``queue_len`` bookkeeping) — the deployment DES disables it when
+    no controller will ever call ``queue_len``.
     """
 
     def __init__(self, idx: int, num_devices: int,
@@ -394,9 +617,13 @@ class ReplicaModel:
         self.idx = idx
         self.num_devices = num_devices
         self.unit_sets = unit_sets
+        self.programs = {pol: compile_units(us)
+                         for pol, us in unit_sets.items()}
         self.policy = policy
         self.monitor = monitor
         self.price = price              # $/hr of this device group
+        self.reference = False          # historical walk + O(n) probes
+        self.track_inflight = True      # maintain the queue_len heap
         # Routability flag owned by the deployment control timeline:
         # warm-up ("up" pending), drain ("down") and failure ("fail")
         # all mask the group by flipping this; routers skip ineligible
@@ -406,6 +633,7 @@ class ReplicaModel:
         self.link_free = [0.0] * num_devices
         self.dev_busy = [0.0] * num_devices
         self.link_busy = [0.0] * num_devices
+        self._max_free = 0.0            # == max(dev_free + link_free)
         self.completed = 0
         self.switches = 0
         self._finish: List[float] = []          # heap of inflight finishes
@@ -414,15 +642,23 @@ class ReplicaModel:
     def predicted_service(self, req: ClusterRequest,
                           policy: Optional[str] = None) -> float:
         """Unqueued execution latency of ``req`` on this replica."""
-        units = self.unit_sets[policy or self.policy]
-        return sum(u.scaled(req.scale_prompt, req.scale_output)
-                   for u in units)
+        if self.reference:
+            units = self.unit_sets[policy or self.policy]
+            return sum(u.scaled(req.scale_prompt, req.scale_output)
+                       for u in units)
+        return self.programs[policy or self.policy].service(
+            req.scale_prompt, req.scale_output)
 
     def backlog(self, now: float) -> float:
         """Seconds until the most-loaded resource drains (queue delay
         proxy: a new request cannot finish before its bottleneck
-        resource frees up)."""
-        worst = max(max(self.dev_free), max(self.link_free))
+        resource frees up).  The fast path keeps a running maximum —
+        free timelines only ever move forward — so a router probe is
+        O(1) instead of rescanning both free-lists."""
+        if self.reference:
+            worst = max(max(self.dev_free), max(self.link_free))
+        else:
+            worst = self._max_free
         return max(0.0, worst - now)
 
     def queue_len(self, now: float) -> int:
@@ -440,8 +676,10 @@ class ReplicaModel:
         ``scale_prompt=0``, so prefill + decode == the colocated total.
         """
         sp, so = _phase_scales(req, phase)
-        units = self.unit_sets[policy or self.policy]
-        return sum(u.scaled(sp, so) for u in units)
+        if self.reference:
+            units = self.unit_sets[policy or self.policy]
+            return sum(u.scaled(sp, so) for u in units)
+        return self.programs[policy or self.policy].service(sp, so)
 
     # -------------------------------------------------------------- #
     def submit(self, req: ClusterRequest,
@@ -459,7 +697,9 @@ class ReplicaModel:
     def _run_units(self, req: ClusterRequest,
                    events: Optional[List[Tuple]] = None,
                    phase: str = "both",
-                   not_before: float = 0.0) -> Tuple[float, float, float]:
+                   not_before: float = 0.0,
+                   agg: Optional[EventAggregate] = None
+                   ) -> Tuple[float, float, float]:
         """Walk the request's stage units; returns ``(finish,
         prefill_end, start)`` where ``prefill_end`` is when the last
         unit with any prefill share completes (the first token's
@@ -467,6 +707,174 @@ class ReplicaModel:
         ``start`` is when the first unit actually began (after
         queueing) — the anchor chunked KV streaming interpolates
         production progress from."""
+        if self.reference:
+            return self._run_units_reference(req, events, phase,
+                                             not_before, agg)
+        return self._run_units_program(req, events, phase,
+                                       not_before, agg)
+
+    def _run_units_program(self, req: ClusterRequest,
+                           events: Optional[List[Tuple]],
+                           phase: str, not_before: float,
+                           agg: Optional[EventAggregate]
+                           ) -> Tuple[float, float, float]:
+        """Fast walk over the compiled program.  Bit-identical to
+        ``_run_units_reference``: every arithmetic expression below is
+        the same IEEE float64 expression the reference walk evaluates
+        per unit (the parity suite asserts equal event logs)."""
+        sp, so = _phase_scales(req, phase)
+        prog = self.programs[self.policy]
+        if prog.n >= _VECTOR_WALK_MIN:
+            wp = prog.walk_plan(phase)
+            if wp.n >= _VECTOR_WALK_MIN:
+                return self._run_units_vector(req, events, phase,
+                                              not_before, agg, wp,
+                                              sp, so)
+        durs = prog.durations(sp, so)
+        t = req.arrival
+        if not_before > t:
+            t = not_before
+        prefill_end = t
+        start_t: Optional[float] = None
+        dev_free = self.dev_free
+        link_free = self.link_free
+        dev_busy = self.dev_busy
+        link_busy = self.link_busy
+        idx = self.idx
+        rid = req.rid
+        append = events.append if events is not None else None
+        agg_add = agg.add if agg is not None else None
+        for step, dur in zip(prog.steps, durs):
+            if dur <= 0.0:
+                continue            # unit fully belongs to the other phase
+            kind, dev, pre_share, u_dur, u_frac, u_omf = step
+            if kind == 0:
+                start = link_free[dev]
+                if t > start:
+                    start = t
+                end = start + dur
+                link_free[dev] = end
+                link_busy[dev] += dur
+            else:
+                start = dev_free[dev]
+                if t > start:
+                    start = t
+                end = start + dur
+                dev_free[dev] = end
+                dev_busy[dev] += dur
+            if start_t is None:
+                start_t = start
+            if append is not None:
+                append((idx, rid, kind, dev, start, end))
+            elif agg_add is not None:
+                agg_add(idx, kind, dev, start, end)
+            t = end
+            if pre_share:
+                # the unit's prefill share finishes first; its decode
+                # share (repeated decode iterations) follows — a
+                # request's own decode work cannot precede its first
+                # token, so TTFT charges only the prefill share here
+                prefill_end = start + u_dur * (u_frac * 0.0
+                                               + u_omf * sp)
+        if start_t is not None and t > self._max_free:
+            # ends are monotone along the walk, so the final t is the
+            # max the free timelines moved to
+            self._max_free = t
+        if self.track_inflight:
+            heapq.heappush(self._finish, t)
+        if phase != "prefill":      # the decode side owns completion
+            self.completed += 1
+        return t, prefill_end, (start_t if start_t is not None else t)
+
+    def _run_units_vector(self, req: ClusterRequest,
+                          events: Optional[List[Tuple]],
+                          phase: str, not_before: float,
+                          agg: Optional[EventAggregate],
+                          wp: "_WalkPlan", sp: float, so: float
+                          ) -> Tuple[float, float, float]:
+        """Segmented-cumsum walk for long programs: the per-unit loop
+        collapses to one seeded ``np.cumsum`` per resource segment (see
+        ``_WalkPlan``); busy cells and aggregates accumulate through
+        seeded cumsums too, so every value matches the per-unit walk
+        bit-for-bit while the Python work scales with the number of
+        distinct resources, not units."""
+        durs = wp.dur * (wp.frac * so + wp.omf * sp)
+        t = req.arrival
+        if not_before > t:
+            t = not_before
+        t0v = t
+        A = wp.n
+        bounds = wp.seg_bounds
+        dev_free = self.dev_free
+        link_free = self.link_free
+        ends = np.empty(A)
+        head_starts: List[float] = []
+        for j, (k, d) in enumerate(wp.seg_res):
+            a = bounds[j]
+            b = bounds[j + 1]
+            free = link_free[d] if k == 0 else dev_free[d]
+            start = free if free > t else t
+            head_starts.append(start)
+            seg = np.cumsum(np.concatenate(([start], durs[a:b])))
+            ends[a:b] = seg[1:]
+            t = float(seg[-1])
+        starts = np.empty(A)
+        starts[1:] = ends[:-1]
+        for j, p in enumerate(bounds[:-1]):
+            starts[p] = head_starts[j]
+        dev_busy = self.dev_busy
+        link_busy = self.link_busy
+        for k, d, pos, last, cnt in wp.res_groups:
+            end_last = float(ends[last])
+            if k == 0:
+                link_free[d] = end_last
+                link_busy[d] = float(np.cumsum(np.concatenate(
+                    ([link_busy[d]], durs[pos])))[-1])
+            else:
+                dev_free[d] = end_last
+                dev_busy[d] = float(np.cumsum(np.concatenate(
+                    ([dev_busy[d]], durs[pos])))[-1])
+        if events is not None:
+            events.extend(zip(repeat(self.idx), repeat(req.rid),
+                              wp.kinds, wp.devs,
+                              starts.tolist(), ends.tolist()))
+        elif agg is not None:
+            spans = ends - starts
+            counts = agg.counts
+            seconds = agg.seconds
+            ridx = self.idx
+            for k, d, pos, last, cnt in wp.res_groups:
+                key = (ridx, k, d)
+                if key in counts:
+                    counts[key] += cnt
+                    seed = seconds[key]
+                else:
+                    counts[key] = cnt
+                    seed = 0.0
+                seconds[key] = float(np.cumsum(np.concatenate(
+                    ([seed], spans[pos])))[-1])
+        if t > self._max_free:
+            self._max_free = t
+        if self.track_inflight:
+            heapq.heappush(self._finish, t)
+        if phase != "prefill":      # the decode side owns completion
+            self.completed += 1
+        if wp.pe_pos >= 0:
+            prefill_end = float(starts[wp.pe_pos]) + wp.pe_dur * (
+                wp.pe_frac * 0.0 + wp.pe_omf * sp)
+        else:
+            prefill_end = t0v
+        return t, prefill_end, head_starts[0]
+
+    def _run_units_reference(self, req: ClusterRequest,
+                             events: Optional[List[Tuple]],
+                             phase: str, not_before: float,
+                             agg: Optional[EventAggregate] = None
+                             ) -> Tuple[float, float, float]:
+        """The historical per-unit object walk (PR 2's
+        ``call_reference`` idiom): kept verbatim as the oracle the fast
+        path must reproduce bit-identically, and as the honest
+        "before" of benchmarks/des_throughput.py."""
         sp, so = _phase_scales(req, phase)
         t = max(req.arrival, not_before)
         prefill_end = t
@@ -486,13 +894,13 @@ class ReplicaModel:
             if events is not None:
                 events.append((self.idx, req.rid, u.kind, u.device,
                                start, end))
+            elif agg is not None:
+                agg.add(self.idx, u.kind, u.device, start, end)
             t = end
             if u.decode_frac < 1.0:
-                # the unit's prefill share finishes first; its decode
-                # share (repeated decode iterations) follows — a
-                # request's own decode work cannot precede its first
-                # token, so TTFT charges only the prefill share here
                 prefill_end = start + u.scaled(sp, 0.0)
+        if start_t is not None and t > self._max_free:
+            self._max_free = t
         heapq.heappush(self._finish, t)
         if phase != "prefill":      # the decode side owns completion
             self.completed += 1
@@ -511,6 +919,7 @@ class ReplicaModel:
         for free in (self.dev_free, self.link_free):
             for d in range(self.num_devices):
                 free[d] = max(free[d], now) + stall
+        self._max_free = max(max(self.dev_free), max(self.link_free))
         self.switches += 1
         return True
 
@@ -540,6 +949,9 @@ class ClusterResult:
     #                                     a failed group (recovered)
     dropped: int = 0                    # accepted requests lost because
     #                                     no eligible group remained
+    # events="agg" replaces the tuple log with this reduction (None in
+    # "full" mode; both None under events=None)
+    event_agg: Optional[EventAggregate] = None
 
     @property
     def throughput(self) -> float:
@@ -753,7 +1165,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                         kv_chunks: int = 1,
                         timeline: Sequence[ControlEvent] = (),
                         controller=None,
-                        start_ineligible: Sequence[int] = ()
+                        start_ineligible: Sequence[int] = (),
+                        events: Optional[str] = "full"
                         ) -> ClusterResult:
     """One DES entry point behind every serving surface.
 
@@ -796,9 +1209,18 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     that begin masked with no pending "up" event (a controller's
     parked reserve pool).
 
+    ``events`` selects the recording mode: ``"full"`` (default) keeps
+    the per-unit tuple log, ``"agg"`` keeps only the
+    :class:`EventAggregate` reduction (the memory that matters at 1M
+    requests), ``None`` records nothing.  The schedule itself is
+    identical in every mode — recording is strictly observational.
+
     Deterministic: identical (trace, plans, router, timeline,
     controller config) produce a bit-identical event log.
     """
+    if events not in ("full", "agg", None):
+        raise ValueError(f"events must be 'full', 'agg' or None, "
+                         f"got {events!r}")
     ic = interconnect or Interconnect()
     # Pending control events live in a heap so a controller can inject
     # events mid-run; the (time, kind-order, group, seq) key reproduces
@@ -826,7 +1248,14 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     # records carry the request's CURRENT placement so a later failure
     # can find and re-route its victims.
     records: List[Optional[Dict]] = [None] * len(trace)
-    events: List[Tuple] = []
+    ev_log: Optional[List[Tuple]] = [] if events == "full" else None
+    agg: Optional[EventAggregate] = (EventAggregate()
+                                     if events == "agg" else None)
+    # queue_len is only ever probed by a controller epoch; without one
+    # the per-request finish-heap push is pure churn
+    track = controller is not None
+    for rep in replicas:
+        rep.track_inflight = track
     kv_resident: List[Tuple[float, float, float]] = []
     counters = {"shed": 0, "dropped": 0, "rerouted": 0,
                 "transfers": 0, "transfer_seconds": 0.0}
@@ -848,8 +1277,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         kv_i = None
         if p_idx == d_idx:
             rep = replicas[p_idx]
-            finish, first_tok, _ = rep._run_units(req, events, "both",
-                                                  admit_at)
+            finish, first_tok, _ = rep._run_units(req, ev_log, "both",
+                                                  admit_at, agg)
             ttft_abs, kv_at = first_tok, None
             if rep.monitor is not None:
                 rep.monitor.record_request(
@@ -858,17 +1287,22 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                 rep.maybe_switch(req.arrival)
         else:
             pre, dec = replicas[p_idx], replicas[d_idx]
-            pre_fin, _, pre_start = pre._run_units(req, events,
-                                                   "prefill", admit_at)
+            pre_fin, _, pre_start = pre._run_units(req, ev_log,
+                                                   "prefill", admit_at,
+                                                   agg)
             kv_at, xfer_evs, busy = _stream_kv(
                 ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
                 kv_chunks)
             for (x0, x1) in xfer_evs:
-                events.append((d_idx, req.rid, KV_TRANSFER, p_idx,
-                               x0, x1))
+                if ev_log is not None:
+                    ev_log.append((d_idx, req.rid, KV_TRANSFER, p_idx,
+                                   x0, x1))
+                elif agg is not None:
+                    agg.add(d_idx, KV_TRANSFER, p_idx, x0, x1)
             counters["transfers"] += 1
             counters["transfer_seconds"] += busy
-            finish, _, _ = dec._run_units(req, events, "decode", kv_at)
+            finish, _, _ = dec._run_units(req, ev_log, "decode", kv_at,
+                                          agg)
             # first token streams from the decode group once the state
             # lands there — transfer time is part of TTFT
             ttft_abs = kv_at
@@ -1013,7 +1447,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         per_replica_completed=[r.completed for r in replicas],
         per_replica_busy=[sum(r.dev_busy) for r in replicas],
         switches=sum(r.switches for r in replicas),
-        events=events,
+        events=ev_log if ev_log is not None else [],
+        event_agg=agg,
         price_rate=sum(r.price for r in replicas),
         ttfts=ttfts, shed=counters["shed"], slo_ok=slo_ok,
         transfers=counters["transfers"],

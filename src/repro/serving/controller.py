@@ -41,7 +41,8 @@ comparable with static compositions, whose bill is simply
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import (ClusterResult, ControlEvent,
                                   ControlSignals)
@@ -148,7 +149,15 @@ class AutoscalePolicy:
 
     # -------------------------------------------------------------- #
     def _reset(self, t0: float) -> None:
-        self._win: List[ControlSignals] = []
+        # O(1) window fold: arrivals/shed are integer counters, so the
+        # running totals stay exact as epochs enter and leave the
+        # deque; only the per-group pressure rows (which depend on the
+        # CURRENT active set applied to each snapshot) still walk the
+        # bounded window
+        keep = max(1, int(round(self.cfg.window / self.cfg.interval)))
+        self._win: Deque[ControlSignals] = deque(maxlen=keep)
+        self._arr_sum = 0
+        self._shed_sum = 0
         self._last_action = t0 - self.cfg.cooldown
         self._warm_at: Dict[int, float] = {}
         self.active: Dict[int, float] = {}   # group -> billing start
@@ -195,8 +204,8 @@ class AutoscalePolicy:
     # -------------------------------------------------------------- #
     def _windowed(self):
         win = self._win
-        arr = sum(s.arrivals for s in win)
-        shed = sum(s.shed for s in win)
+        arr = self._arr_sum
+        shed = self._shed_sum
         span = len(win) * self.cfg.interval
         demand = arr / max(span, 1e-12)
         shed_rate = shed / max(arr, 1)
@@ -255,9 +264,13 @@ class AutoscalePolicy:
     def decide(self, sig: ControlSignals) -> List[ControlEvent]:
         """One decision epoch: fold the new snapshot into the sliding
         window, then at most one action (after the cooldown)."""
+        if len(self._win) == self._win.maxlen:
+            old = self._win[0]
+            self._arr_sum -= old.arrivals
+            self._shed_sum -= old.shed
         self._win.append(sig)
-        keep = max(1, int(round(self.cfg.window / self.cfg.interval)))
-        del self._win[:-keep]
+        self._arr_sum += sig.arrivals
+        self._shed_sum += sig.shed
         if sig.now - self._last_action < self.cfg.cooldown:
             return []
         demand, shed_rate, backlog, util = self._windowed()

@@ -110,7 +110,14 @@ class LeastLoadedRouter(Router):
         cand = eligible_indices(replicas)
         if not cand:
             return -1
-        return min(cand, key=lambda i: (replicas[i].backlog(now), i))
+        # explicit first-minimum loop == min(cand, key=(backlog, i))
+        best = cand[0]
+        best_b = replicas[best].backlog(now)
+        for i in cand[1:]:
+            b = replicas[i].backlog(now)
+            if b < best_b:
+                best, best_b = i, b
+        return best
 
 
 class JSEDRouter(Router):
@@ -149,8 +156,17 @@ class JSEDRouter(Router):
         cand = eligible_indices(replicas)
         if not cand:
             return -1
-        best = min(cand,
-                   key=lambda i: (self.score(req, replicas[i], now), i))
+        # explicit first-minimum loop == min(cand, key=(score, i)):
+        # this runs once per candidate group per request, so the
+        # lambda/tuple-per-candidate overhead is the router hot path
+        rep = replicas[cand[0]]
+        best = cand[0]
+        best_s = rep.backlog(now) + rep.predicted_service(req)
+        for i in cand[1:]:
+            rep = replicas[i]
+            s = rep.backlog(now) + rep.predicted_service(req)
+            if s < best_s:
+                best, best_s = i, s
         choice = best
         if req.session is not None:
             home = self._session_home.get(req.session)
@@ -273,9 +289,17 @@ class PDRouter(Router):
 
     def _best(self, pool: List[int], req, replicas, now,
               phase: str) -> int:
-        return min(pool, key=lambda i: (
-            replicas[i].backlog(now)
-            + replicas[i].predicted_phase_service(req, phase), i))
+        # explicit first-minimum loop == min(pool, key=(delay, i))
+        rep = replicas[pool[0]]
+        best = pool[0]
+        best_s = (rep.backlog(now)
+                  + rep.predicted_phase_service(req, phase))
+        for i in pool[1:]:
+            rep = replicas[i]
+            s = rep.backlog(now) + rep.predicted_phase_service(req, phase)
+            if s < best_s:
+                best, best_s = i, s
+        return best
 
     def _transfer_tail(self, req, p: int, d: int) -> float:
         """Expected KV-transfer seconds landing in TTFT.  Serial: the

@@ -48,9 +48,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import CATALOG, Calibration, calibrate
 from repro.core.monitor import MonitorConfig
-from repro.core.simulator import (_EVENT_ORDER, ClusterResult,
-                                  ControlEvent, Interconnect,
-                                  simulate_deployment)
+from repro.core.simulator import (_EVENT_ORDER, ClusterRequest,
+                                  ClusterResult, ControlEvent,
+                                  Interconnect, simulate_deployment)
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import ROUTERS, make_router
 from repro.serving.workload import WorkloadRequest, assign_slos
@@ -401,9 +401,58 @@ class Deployment:
         return idxs
 
     # ------------------------------------------------------------------ #
-    def simulate(self, trace: Sequence[WorkloadRequest], *,
+    def prepare(self, trace: Sequence[WorkloadRequest]
+                ) -> List[ClusterRequest]:
+        """Preprocess a workload trace ONCE for repeated replays.
+
+        Produces exactly the sorted ``ClusterRequest`` list
+        :meth:`simulate` builds internally — spec SLOs stamped
+        (overriding any the trace carried), arrival-sorted, per-request
+        scales and KV sizes resolved — so callers replaying the same
+        trace against many candidates (sizing search, controller
+        sweeps) pay the conversion once and pass ``prepared=``.
+        KV sizes are memoized by prompt length (the KV model is a pure
+        function of it), which is most of the historical per-call cost.
+        """
+        cluster = self.cluster()
+        slos = self.spec.slos
+        if slos:
+            slo_base = slos.get("base", 0.0) or 0.0
+            slo_tok = slos.get("per_output_token", 0.0) or 0.0
+            slo_ttft = slos.get("ttft")
+            slo_comp = not (slo_base <= 0.0 and slo_tok <= 0.0)
+        kv_memo: Dict[int, float] = {}
+        kv_bytes = cluster.kv_bytes
+        bp = cluster.base_prompt
+        bo = cluster.base_output
+        out: List[ClusterRequest] = []
+        for r in sorted(trace, key=lambda r: (r.arrival, r.rid)):
+            p = r.prompt_tokens
+            kv = kv_memo.get(p)
+            if kv is None:
+                kv = kv_memo[p] = kv_bytes(p)
+            if slos:
+                slo = (slo_base + slo_tok * r.output_tokens
+                       if slo_comp else None)
+                ttft = slo_ttft
+            else:
+                slo, ttft = r.slo, r.slo_ttft
+            out.append(ClusterRequest(
+                rid=r.rid, arrival=r.arrival,
+                scale_prompt=p / bp,
+                scale_output=r.output_tokens / bo,
+                session=r.session, kv_bytes=kv,
+                slo=slo, slo_ttft=ttft))
+        return out
+
+    def simulate(self, trace: Optional[Sequence[WorkloadRequest]] = None,
+                 *,
                  failures: Optional[Sequence[Tuple[float, int]]] = None,
-                 router=None, controller=None) -> ClusterResult:
+                 router=None, controller=None,
+                 events: Optional[str] = "full",
+                 reference: bool = False,
+                 prepared: Optional[Sequence[ClusterRequest]] = None
+                 ) -> ClusterResult:
         """Replay an open-loop trace on the DES backend.
 
         ``failures=[(t, group_idx), ...]`` hard-kills groups mid-trace
@@ -421,12 +470,33 @@ class Deployment:
         its parked reserve pool on first use), observes windowed DES
         signals every ``controller.interval`` simulated seconds, and
         injects scale up/down events into the live timeline.
+
+        ``events`` selects event recording (``"full"`` | ``"agg"`` |
+        ``None`` — see ``simulator.simulate_deployment``);
+        ``reference=True`` replays on the historical per-unit walk
+        (the parity oracle / benchmark baseline); ``prepared`` replaces
+        ``trace`` with a :meth:`prepare` result so repeated replays
+        skip the per-call trace preprocessing.
         """
         cluster = self.cluster()
         if controller is not None:
             controller.bind(self)
-        if self.spec.slos:
-            trace = assign_slos(trace, **self.spec.slos)
+        if prepared is not None:
+            creqs: Sequence[ClusterRequest] = prepared
+        elif trace is None:
+            raise ValueError("simulate needs a trace (or a "
+                             "prepare()d one via prepared=)")
+        elif reference:
+            # historical prep path (per-replay SLO stamping + scalar
+            # per-request conversion) so reference mode is an honest
+            # end-to-end baseline, not just the reference walk
+            if self.spec.slos:
+                trace = assign_slos(trace, **self.spec.slos)
+            creqs = [cluster.to_cluster_request(r)
+                     for r in sorted(trace,
+                                     key=lambda r: (r.arrival, r.rid))]
+        else:
+            creqs = self.prepare(trace)
         timeline = list(self._timeline)
         for (t, g) in (failures or []):
             g = int(g)
@@ -434,15 +504,18 @@ class Deployment:
                 raise ValueError(f"cannot fail group {g}; deployment "
                                  f"has {self.num_groups}")
             timeline.append(ControlEvent(float(t), "fail", g))
-        creqs = [cluster.to_cluster_request(r)
-                 for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
+        replicas = cluster.build_replicas()
+        if reference:
+            for rep in replicas:
+                rep.reference = True
         return simulate_deployment(
-            cluster.build_replicas(), creqs, router or self._router(),
+            replicas, creqs, router or self._router(),
             interconnect=cluster.interconnect,
             kv_chunks=self.spec.kv_chunks,
             timeline=timeline,
             controller=controller,
-            start_ineligible=sorted(self._reserve))
+            start_ineligible=sorted(self._reserve),
+            events=events)
 
     # ------------------------------------------------------------------ #
     def launch(self, cfg=None, params=None) -> "LaunchedDeployment":

@@ -18,6 +18,22 @@ session id for decode/KV affinity.
 
 Everything is driven by ``random.Random(seed)`` — traces are
 deterministic and portable across runs and machines.
+
+Generation is vectorized: each generator transplants its
+``random.Random`` MT19937 state into a ``numpy.random.RandomState``
+(the SAME generator, so the uniform stream is bit-identical) and
+applies the arrival/length transforms to whole blocks.  Two numpy
+caveats keep the sequences exactly equal to the historical per-request
+``random`` calls (regression-tested in tests/test_workload_vec.py):
+
+  * ``np.log``/``np.exp`` take SIMD paths that differ from libm in the
+    last ulp on this numpy, so log/exp transforms go through
+    ``math.log``/``math.exp`` element-wise (``_log_seq``/``_exp_seq``);
+    ``sin``/``cos``/``sqrt``/``cumsum`` are bit-identical and stay
+    vectorized,
+  * ``random.gauss`` consumes two uniforms on every other call (the
+    Box–Muller sine value is cached), so the length sampler indexes the
+    uniform block in that 6-per-request-pair pattern.
 """
 from __future__ import annotations
 
@@ -25,6 +41,48 @@ import dataclasses
 import math
 import random
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_TWOPI = 2.0 * math.pi
+
+
+class _UniformStream:
+    """Bit-exact numpy view of a ``random.Random`` uniform stream.
+
+    Transplants the Mersenne-Twister state, so ``take(n)`` returns
+    exactly the floats ``n`` successive ``rng.random()`` calls would
+    have produced (both generators derive doubles from the same 624-word
+    state with the same 53-bit recipe).
+    """
+
+    def __init__(self, rng: random.Random):
+        key = rng.getstate()[1]         # 624 words + position
+        self._rs = np.random.RandomState()
+        self._rs.set_state(("MT19937",
+                            np.asarray(key[:-1], dtype=np.uint32),
+                            key[-1], 0, 0.0))
+
+    def take(self, n: int) -> np.ndarray:
+        return self._rs.random_sample(n)
+
+
+def _log_seq(x: np.ndarray) -> np.ndarray:
+    """Element-wise ``math.log`` (libm, not numpy's SIMD variant)."""
+    return np.fromiter(map(math.log, x.tolist()),
+                       dtype=np.float64, count=len(x))
+
+
+def _exp_seq(x: np.ndarray) -> np.ndarray:
+    """Element-wise ``math.exp`` (libm, not numpy's SIMD variant)."""
+    return np.fromiter(map(math.exp, x.tolist()),
+                       dtype=np.float64, count=len(x))
+
+
+def _exp_gaps(u: np.ndarray, rate: float) -> np.ndarray:
+    """``rng.expovariate(rate)`` applied to a uniform block:
+    ``-log(1 - u) / rate``, the exact CPython expression."""
+    return np.negative(_log_seq(1.0 - u)) / rate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,34 +121,78 @@ _MAX_PROMPT = 16384
 _MAX_OUTPUT = 4096
 
 
-def _sample_lengths(rng: random.Random,
-                    mix: Sequence[RequestClass]) -> Tuple[int, int]:
-    r = rng.random() * sum(c.weight for c in mix)
-    acc = 0.0
-    cls = mix[-1]
+def _sample_lengths_block(rng: random.Random, n: int,
+                          mix: Sequence[RequestClass]
+                          ) -> Tuple[List[int], List[int]]:
+    """Vectorized length sampler: (prompts, outputs) for ``n`` requests.
+
+    Reproduces, bit-for-bit, ``n`` sequential draws of the historical
+    per-request sampler (class pick, ``gauss`` lognormal prompt,
+    geometric output).  ``rng.gauss`` consumes two uniforms on
+    even-numbered calls and zero on odd ones (Box–Muller caches the sine
+    value), so a request PAIR consumes six uniforms in the fixed order
+    [class0, gauss_a, gauss_b, out0, class1, out1].
+    """
+    if n <= 0:
+        return [], []
+    pairs_full = n // 2             # pairs with an odd member present
+    pairs = (n + 1) // 2            # even members (incl. trailing half)
+    u = _UniformStream(rng).take(6 * pairs)
+    base = 6 * np.arange(pairs)
+    base_full = base[:pairs_full]
+
+    # class pick: first class whose cumulative weight >= r
+    acc: List[float] = []
+    total = 0.0
     for c in mix:
-        acc += c.weight
-        if r <= acc:
-            cls = c
-            break
-    prompt = int(cls.prompt_median * math.exp(
-        rng.gauss(0.0, cls.prompt_sigma)))
-    output = 1 + int(-cls.output_mean * math.log(max(rng.random(), 1e-12)))
-    return (max(1, min(prompt, _MAX_PROMPT)),
-            max(1, min(output, _MAX_OUTPUT)))
+        total += c.weight
+        acc.append(total)
+    c_u = np.empty(n)
+    c_u[0::2] = u[base]
+    c_u[1::2] = u[base_full + 4]
+    r = c_u * sum(c.weight for c in mix)
+    idx = np.minimum(np.searchsorted(np.asarray(acc), r, side="left"),
+                     len(mix) - 1)
+
+    # Box–Muller exactly as random.gauss: cos branch for even calls,
+    # cached sin branch for odd calls
+    x2pi = u[base + 1] * _TWOPI
+    g2rad = np.sqrt(-2.0 * _log_seq(1.0 - u[base + 2]))
+    z = np.empty(n)
+    z[0::2] = np.cos(x2pi) * g2rad
+    z[1::2] = (np.sin(x2pi) * g2rad)[:pairs_full]
+
+    med = np.asarray([float(c.prompt_median) for c in mix])[idx]
+    sig = np.asarray([c.prompt_sigma for c in mix])[idx]
+    prompt = (med * _exp_seq(0.0 + z * sig)).astype(np.int64)
+    np.clip(prompt, 1, _MAX_PROMPT, out=prompt)
+
+    o_u = np.empty(n)
+    o_u[0::2] = u[base + 3]
+    o_u[1::2] = u[base_full + 5]
+    om = np.asarray([float(c.output_mean) for c in mix])[idx]
+    output = 1 + (np.negative(om)
+                  * _log_seq(np.maximum(o_u, 1e-12))).astype(np.int64)
+    np.clip(output, 1, _MAX_OUTPUT, out=output)
+    return prompt.tolist(), output.tolist()
 
 
 def _attach_sessions(rng: random.Random, n: int,
                      follow_prob: float) -> List[Optional[int]]:
     """With prob ``follow_prob`` a request continues a live session."""
+    # Stays scalar: rng.choice draws a data-dependent number of random
+    # words (rejection sampling over the live-list length), so the
+    # uniform stream cannot be pre-split; bound methods keep it cheap.
     sessions: List[Optional[int]] = []
+    append = sessions.append
+    rand, choice = rng.random, rng.choice
     live: List[int] = []
     next_sid = 0
     for _ in range(n):
-        if live and rng.random() < follow_prob:
-            sessions.append(rng.choice(live))
+        if live and rand() < follow_prob:
+            append(choice(live))
         else:
-            sessions.append(next_sid)
+            append(next_sid)
             live.append(next_sid)
             if len(live) > 64:          # bounded working set of sessions
                 live.pop(0)
@@ -104,23 +206,19 @@ def _finish(arrivals: List[float], seed: int,
     rng = random.Random(f"{seed}:lengths")
     sessions = _attach_sessions(random.Random(f"{seed}:sessions"),
                                 len(arrivals), session_follow)
-    out = []
-    for i, t in enumerate(sorted(arrivals)):
-        p, o = _sample_lengths(rng, mix)
-        out.append(WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
-                                   output_tokens=o, session=sessions[i]))
-    return out
+    prompts, outputs = _sample_lengths_block(rng, len(arrivals), mix)
+    return [WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
+                            output_tokens=o, session=s)
+            for i, (t, p, o, s) in enumerate(
+                zip(sorted(arrivals), prompts, outputs, sessions))]
 
 
 # --------------------------------------------------------------------- #
 def poisson_trace(rate: float, num_requests: int, seed: int = 0,
                   mix: Sequence[RequestClass] = DEFAULT_MIX,
                   session_follow: float = 0.3) -> List[WorkloadRequest]:
-    rng = random.Random(f"{seed}:poisson")
-    t, arrivals = 0.0, []
-    for _ in range(num_requests):
-        t += rng.expovariate(rate)
-        arrivals.append(t)
+    u = _UniformStream(random.Random(f"{seed}:poisson")).take(num_requests)
+    arrivals = np.cumsum(_exp_gaps(u, rate)).tolist()
     return _finish(arrivals, seed, mix, session_follow)
 
 
@@ -139,22 +237,39 @@ def bursty_trace(rate: float, num_requests: int, seed: int = 0,
     assert burst_factor * on_fraction < 1.0, \
         "burst_factor * on_fraction must be < 1 to preserve the " \
         "long-run rate (the OFF-state rate would go negative)"
-    rng = random.Random(f"{seed}:bursty")
+    stream = _UniformStream(random.Random(f"{seed}:bursty"))
     period = period or 20.0 / rate
     on_rate = burst_factor * rate
     off_rate = rate * (1.0 - burst_factor * on_fraction) \
         / (1.0 - on_fraction)
+    # The state machine is inherently sequential (state flips depend on
+    # prior draws), but the expensive part — libm log per draw — batches:
+    # precompute -log(1-u) blocks in draw order; expovariate(lam) is
+    # then one divide per draw, matching CPython's -log(1-u)/lam bits.
+    block: List[float] = []
+    k = 0
+
+    def draw() -> float:
+        nonlocal block, k
+        if k == len(block):
+            block = np.negative(_log_seq(1.0 - stream.take(8192))).tolist()
+            k = 0
+        e = block[k]
+        k += 1
+        return e
+
+    # precomputed constants equal the per-iteration 1/mean expressions
+    inv_on = 1.0 / (period * on_fraction)
+    inv_off = 1.0 / (period * (1 - on_fraction))
     t, arrivals = 0.0, []
     on = True
-    state_end = rng.expovariate(1.0 / (period * on_fraction))
+    state_end = draw() / inv_on
     while len(arrivals) < num_requests:
-        lam = on_rate if on else off_rate
-        dt = rng.expovariate(lam)
+        dt = draw() / (on_rate if on else off_rate)
         if t + dt >= state_end:         # state flips before next arrival
             t = state_end
             on = not on
-            mean_len = period * (on_fraction if on else 1 - on_fraction)
-            state_end = t + rng.expovariate(1.0 / mean_len)
+            state_end = t + draw() / (inv_on if on else inv_off)
             continue
         t += dt
         arrivals.append(t)
@@ -167,15 +282,23 @@ def diurnal_trace(rate: float, num_requests: int, seed: int = 0,
                   session_follow: float = 0.3) -> List[WorkloadRequest]:
     """Rate ``rate * (1 + amplitude*sin(2 pi t / period))`` by thinning."""
     assert 0.0 <= amplitude < 1.0
-    rng = random.Random(f"{seed}:diurnal")
+    stream = _UniformStream(random.Random(f"{seed}:diurnal"))
     period = period or 50.0 / rate      # a few "days" per trace
     peak = rate * (1.0 + amplitude)
-    t, arrivals = 0.0, []
+    # Thinning consumes exactly 2 uniforms per candidate (gap, accept),
+    # so whole blocks of candidates vectorize; acceptance averages
+    # 1/(1+amplitude), so ~1.3x oversampling usually lands in one block.
+    chunk = max(1024, min(2 * num_requests, 1 << 20))
+    t_prev = 0.0
+    arrivals: List[float] = []
     while len(arrivals) < num_requests:
-        t += rng.expovariate(peak)
-        lam = rate * (1.0 + amplitude * math.sin(2 * math.pi * t / period))
-        if rng.random() < lam / peak:
-            arrivals.append(t)
+        u = stream.take(2 * chunk)
+        gaps = _exp_gaps(u[0::2], peak)
+        ts = np.cumsum(np.concatenate(([t_prev], gaps)))[1:]
+        lam = rate * (1.0 + amplitude * np.sin(2 * math.pi * ts / period))
+        arrivals.extend(ts[u[1::2] < lam / peak].tolist())
+        t_prev = float(ts[-1])
+    del arrivals[num_requests:]
     return _finish(arrivals, seed, mix, session_follow)
 
 

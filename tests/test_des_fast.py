@@ -1,0 +1,229 @@
+"""Parity suite for the vectorized DES fast core.
+
+The fast path (compiled ``UnitProgram`` walks, dot-product scoring,
+O(1) backlog, segmented-cumsum walks for long programs) must reproduce
+the historical reference walk bit-identically: same event logs, same
+latencies/TTFTs, same assignments, same busy accounting — across all
+four routers, pd on/off, kv_chunks on/off, controller on/off and
+failure injection.  ``reference=True`` flips ONLY the replica walk and
+probe implementations; everything upstream (trace prep, routing code,
+monitor) is shared, so equality here is exact, not approximate.
+
+Also covers the ``events`` recording modes: ``"agg"`` must equal the
+reduction of a ``"full"`` log bit-identically, and ``events=None``
+must leave every metric unchanged.
+"""
+import dataclasses
+
+import pytest
+
+from conftest import random_dag
+from repro.core.simulator import EventAggregate, ReplicaUnit, compile_units
+from repro.serving.controller import AutoscaleConfig, AutoscalePolicy
+from repro.serving.spec import DeploymentSpec
+from repro.serving.workload import diurnal_trace
+
+GROUPS = [["a100", "l40s"], ["h100", "h100"], ["a100", "l40s"]]
+SLOS = {"base": 2.0, "per_output_token": 0.05, "ttft": 1.5}
+ANNEAL = 150
+
+
+def _phased(g, pin_alternating=False):
+    nodes = [dataclasses.replace(
+        node, phase="prefill" if node.idx < len(g.nodes) // 2 else "decode",
+        pinned=(node.idx % 2 if pin_alternating else node.pinned))
+        for node in g.nodes]
+    g2 = type(g)(nodes, dict(g.edges), name=g.name + ".des")
+    g2.validate()
+    return g2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return _phased(random_dag(24, seed=2))
+
+
+@pytest.fixture(scope="module")
+def deep_graph():
+    """Alternating pinned devices force one stage per node, so every
+    policy's program is far past _VECTOR_WALK_MIN — the segmented
+    cumsum walk, not the scalar loop, handles these requests."""
+    return _phased(random_dag(80, seed=2), pin_alternating=True)
+
+
+def _trace(n=400, rate=40.0, seed=0):
+    return diurnal_trace(rate, n, seed=seed)
+
+
+def _pair(graph, spec_kwargs, sim_kwargs=None):
+    """(reference result, fast result) for one configuration."""
+    trace = _trace()
+    sim_kwargs = sim_kwargs or {}
+    kw = dict(anneal_iters=ANNEAL, **spec_kwargs)
+    ref = DeploymentSpec(**kw).compile(graph).simulate(
+        trace, reference=True, **sim_kwargs)
+    fast = DeploymentSpec(**kw).compile(graph).simulate(
+        trace, **sim_kwargs)
+    return ref, fast
+
+
+def _assert_same(ref, fast):
+    assert ref.events == fast.events
+    assert ref.latencies == fast.latencies
+    assert ref.ttfts == fast.ttfts
+    assert ref.assignments == fast.assignments
+    assert ref.per_replica_busy == fast.per_replica_busy
+    assert ref.per_replica_completed == fast.per_replica_completed
+    assert ref.makespan == fast.makespan
+    assert ref.shed == fast.shed
+    assert ref.slo_ok == fast.slo_ok
+    assert ref.switches == fast.switches
+
+
+@pytest.mark.parametrize("router", ["jsed", "round_robin",
+                                    "least_loaded"])
+def test_parity_colocated_routers(graph, router):
+    ref, fast = _pair(graph, dict(groups=GROUPS, router=router,
+                                  slos=SLOS))
+    _assert_same(ref, fast)
+
+
+@pytest.mark.parametrize("kv_chunks", [1, 4])
+def test_parity_pd_split(graph, kv_chunks):
+    ref, fast = _pair(graph, dict(groups=GROUPS, router="pd_split",
+                                  slos=SLOS, pd=True,
+                                  kv_chunks=kv_chunks))
+    _assert_same(ref, fast)
+    assert ref.transfers == fast.transfers
+    assert ref.transfer_seconds == fast.transfer_seconds
+    assert ref.peak_kv_bytes == fast.peak_kv_bytes
+
+
+@pytest.mark.parametrize("failures", [None, [(5.0, 1)]])
+def test_parity_controller_and_failures(graph, failures):
+    trace = _trace()
+    results = []
+    for reference in (True, False):
+        dep = DeploymentSpec(groups=GROUPS, router="jsed", slos=SLOS,
+                             budget=60.0,
+                             anneal_iters=ANNEAL).compile(graph)
+        ctl = AutoscalePolicy(
+            AutoscaleConfig(interval=0.05, window=0.2, cooldown=0.1,
+                            warmup=0.05, queue_hi=0.5, queue_lo=0.15,
+                            util_lo=0.6),
+            inventory=[["l40s"], ["a100"]])
+        results.append(dep.simulate(trace, controller=ctl,
+                                    failures=failures,
+                                    reference=reference))
+    ref, fast = results
+    _assert_same(ref, fast)
+    assert ref.rerouted == fast.rerouted
+    assert ref.dropped == fast.dropped
+
+
+def test_agg_equals_full_reduction(graph):
+    dep = DeploymentSpec(groups=GROUPS, router="jsed", slos=SLOS,
+                         anneal_iters=ANNEAL).compile(graph)
+    trace = _trace()
+    full = dep.simulate(trace)                      # events="full"
+    agg = dep.simulate(trace, events="agg")
+    reduced = EventAggregate.from_events(full.events)
+    assert agg.event_agg is not None
+    assert agg.event_agg.counts == reduced.counts
+    assert agg.event_agg.seconds == reduced.seconds
+    assert agg.events == []
+    assert agg.latencies == full.latencies
+    assert full.event_agg is None
+
+
+def test_events_none_drops_log_keeps_metrics(graph):
+    dep = DeploymentSpec(groups=GROUPS, router="jsed", slos=SLOS,
+                         anneal_iters=ANNEAL).compile(graph)
+    trace = _trace()
+    full = dep.simulate(trace)
+    none = dep.simulate(trace, events=None)
+    assert none.events == [] and none.event_agg is None
+    assert none.latencies == full.latencies
+    assert none.ttfts == full.ttfts
+    assert none.per_replica_busy == full.per_replica_busy
+
+
+def test_events_mode_validated(graph):
+    dep = DeploymentSpec(groups=GROUPS,
+                         anneal_iters=ANNEAL).compile(graph)
+    with pytest.raises(ValueError, match="events"):
+        dep.simulate(_trace(n=5), events="everything")
+
+
+def test_vector_walk_parity_long_programs(deep_graph):
+    kw = dict(groups=[["a100", "l40s"], ["h100", "h100"]],
+              router="jsed", slos=SLOS, anneal_iters=50)
+    trace = _trace(n=300, rate=60.0)
+    dep = DeploymentSpec(**kw).compile(deep_graph)
+    units = dep.cluster().build_replicas()[0].unit_sets
+    assert all(len(us) >= 48 for us in units.values()), \
+        "fixture no longer exercises the vector walk"
+    ref = DeploymentSpec(**kw).compile(deep_graph).simulate(
+        trace, reference=True)
+    fast = dep.simulate(trace)
+    _assert_same(ref, fast)
+    agg = DeploymentSpec(**kw).compile(deep_graph).simulate(
+        trace, events="agg")
+    reduced = EventAggregate.from_events(fast.events)
+    assert agg.event_agg.counts == reduced.counts
+    assert agg.event_agg.seconds == reduced.seconds
+
+
+def test_backlog_fast_matches_reference_scan(graph):
+    dep = DeploymentSpec(groups=GROUPS, router="jsed", slos=SLOS,
+                         anneal_iters=ANNEAL).compile(graph)
+    reps = dep.cluster().build_replicas()
+    creqs = dep.prepare(_trace(n=200))
+    for i, req in enumerate(creqs):
+        rep = reps[i % len(reps)]
+        rep.submit(req)
+        fast = rep.backlog(req.arrival)
+        rep.reference = True
+        assert rep.backlog(req.arrival) == fast
+        rep.reference = False
+
+
+def test_program_cache_keys_by_content():
+    us1 = [ReplicaUnit(1, 0, 0.5, 0.3), ReplicaUnit(0, 1, 0.1, 1.0)]
+    us2 = [ReplicaUnit(1, 0, 0.5, 0.3), ReplicaUnit(0, 1, 0.1, 1.0)]
+    assert compile_units(us1) is compile_units(us2)
+    assert compile_units(us1).service(2.0, 3.0) == sum(
+        u.scaled(2.0, 3.0) for u in us1)
+
+
+# ===================================================================== #
+# Subsample-then-confirm sizing
+# ===================================================================== #
+def _sizing(graph, **kw):
+    from repro.serving.sizing import search_composition
+    trace = _trace(n=240, rate=30.0, seed=4)
+    return search_composition(
+        {"a100": 2, "l40s": 2}, 30.0, trace, graph, iters=10, seed=0,
+        spec_kwargs={"slos": SLOS, "anneal_iters": ANNEAL}, **kw)
+
+
+def test_sizing_subsample_is_deterministic(graph):
+    a = _sizing(graph, subsample=80)
+    b = _sizing(graph, subsample=80)
+    assert a.composition == b.composition
+    assert a.score == b.score
+    assert a.history == b.history
+    assert a.confirmed == b.confirmed and a.confirmed >= 1
+
+
+def test_sizing_subsample_scores_on_full_trace(graph):
+    """The returned score/result come from a full-trace replay of the
+    confirmed incumbent, never from the subsampled prefix."""
+    full = _sizing(graph)
+    sub = _sizing(graph, subsample=80)
+    assert full.confirmed == 0
+    assert sub.result.completed + sub.result.shed \
+        + sub.result.dropped == 240
+    assert sub.result.events, "final replay must keep the event log"
+    # same evaluation budget notion: history rows == iters + 1
+    assert len(sub.history) == len(full.history) == 11

@@ -1,0 +1,192 @@
+"""Regression suite for the vectorized trace generators.
+
+The generators in ``repro.serving.workload`` were rewritten to draw
+their uniforms in blocks (MT19937 state transplanted into numpy) and
+evaluate the arrival/length recurrences as array expressions.  The
+contract is absolute: **identical sequences for identical seeds** — the
+same ``random.Random(f"{seed}:...")`` streams, consumed in the same
+order, through bit-identical float expressions.
+
+The scalar generators below are frozen copies of the pre-vectorization
+implementations (the "before" of this refactor).  They are the oracle:
+every trace kind, seed, size and kwarg combination must match them
+field-for-field, bit-for-bit.  Do NOT "fix" or modernise these copies —
+their obsolescence is the point.
+"""
+import math
+import random
+
+import pytest
+
+from repro.serving.workload import (DEFAULT_MIX, RequestClass,
+                                    WorkloadRequest, bursty_trace,
+                                    diurnal_trace, make_trace,
+                                    poisson_trace)
+
+_MAX_PROMPT = 16384
+_MAX_OUTPUT = 4096
+
+
+# --------------------------------------------------------------------- #
+# Frozen scalar reference (pre-vectorization implementation, verbatim)
+# --------------------------------------------------------------------- #
+def _ref_sample_lengths(rng, mix):
+    r = rng.random() * sum(c.weight for c in mix)
+    acc = 0.0
+    cls = mix[-1]
+    for c in mix:
+        acc += c.weight
+        if r <= acc:
+            cls = c
+            break
+    prompt = int(cls.prompt_median * math.exp(
+        rng.gauss(0.0, cls.prompt_sigma)))
+    output = 1 + int(-cls.output_mean * math.log(max(rng.random(), 1e-12)))
+    return (max(1, min(prompt, _MAX_PROMPT)),
+            max(1, min(output, _MAX_OUTPUT)))
+
+
+def _ref_attach_sessions(rng, n, follow_prob):
+    sessions, live, next_sid = [], [], 0
+    for _ in range(n):
+        if live and rng.random() < follow_prob:
+            sessions.append(rng.choice(live))
+        else:
+            sessions.append(next_sid)
+            live.append(next_sid)
+            if len(live) > 64:
+                live.pop(0)
+            next_sid += 1
+    return sessions
+
+
+def _ref_finish(arrivals, seed, mix, session_follow):
+    rng = random.Random(f"{seed}:lengths")
+    sessions = _ref_attach_sessions(random.Random(f"{seed}:sessions"),
+                                    len(arrivals), session_follow)
+    out = []
+    for i, t in enumerate(sorted(arrivals)):
+        p, o = _ref_sample_lengths(rng, mix)
+        out.append(WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
+                                   output_tokens=o, session=sessions[i]))
+    return out
+
+
+def _ref_poisson(rate, num_requests, seed=0, mix=DEFAULT_MIX,
+                 session_follow=0.3):
+    rng = random.Random(f"{seed}:poisson")
+    t, arrivals = 0.0, []
+    for _ in range(num_requests):
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+    return _ref_finish(arrivals, seed, mix, session_follow)
+
+
+def _ref_bursty(rate, num_requests, seed=0, burst_factor=6.0,
+                on_fraction=0.1, period=0.0, mix=DEFAULT_MIX,
+                session_follow=0.3):
+    rng = random.Random(f"{seed}:bursty")
+    period = period or 20.0 / rate
+    on_rate = burst_factor * rate
+    off_rate = rate * (1.0 - burst_factor * on_fraction) \
+        / (1.0 - on_fraction)
+    t, arrivals = 0.0, []
+    on = True
+    state_end = rng.expovariate(1.0 / (period * on_fraction))
+    while len(arrivals) < num_requests:
+        lam = on_rate if on else off_rate
+        dt = rng.expovariate(lam)
+        if t + dt >= state_end:
+            t = state_end
+            on = not on
+            mean_len = period * (on_fraction if on else 1 - on_fraction)
+            state_end = t + rng.expovariate(1.0 / mean_len)
+            continue
+        t += dt
+        arrivals.append(t)
+    return _ref_finish(arrivals, seed, mix, session_follow)
+
+
+def _ref_diurnal(rate, num_requests, seed=0, period=0.0, amplitude=0.8,
+                 mix=DEFAULT_MIX, session_follow=0.3):
+    rng = random.Random(f"{seed}:diurnal")
+    period = period or 50.0 / rate
+    peak = rate * (1.0 + amplitude)
+    t, arrivals = 0.0, []
+    while len(arrivals) < num_requests:
+        t += rng.expovariate(peak)
+        lam = rate * (1.0 + amplitude * math.sin(2 * math.pi * t / period))
+        if rng.random() < lam / peak:
+            arrivals.append(t)
+    return _ref_finish(arrivals, seed, mix, session_follow)
+
+
+_REF = {"poisson": _ref_poisson, "bursty": _ref_bursty,
+        "diurnal": _ref_diurnal}
+_NEW = {"poisson": poisson_trace, "bursty": bursty_trace,
+        "diurnal": diurnal_trace}
+
+CUSTOM_MIX = (
+    RequestClass("tiny", 0.5, prompt_median=32, prompt_sigma=0.4,
+                 output_mean=16),
+    RequestClass("huge", 0.5, prompt_median=8192, prompt_sigma=1.2,
+                 output_mean=2048),
+)
+
+
+def _assert_traces_equal(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g == w, f"first divergence at rid {g.rid}: {g} != {w}"
+
+
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+@pytest.mark.parametrize("seed", [0, 1, 7, 123])
+def test_bit_identical_to_frozen_reference(kind, seed):
+    for rate, n in ((8.0, 50), (120.0, 500)):
+        _assert_traces_equal(_NEW[kind](rate, n, seed=seed),
+                             _REF[kind](rate, n, seed=seed))
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("bursty", dict(burst_factor=3.0, on_fraction=0.25)),
+    ("bursty", dict(period=2.5)),
+    ("diurnal", dict(amplitude=0.3)),
+    ("diurnal", dict(period=10.0, amplitude=0.95)),
+    ("poisson", dict(session_follow=0.0)),
+    ("poisson", dict(session_follow=0.9)),
+])
+def test_kwargs_preserved(kind, kw):
+    _assert_traces_equal(_NEW[kind](40.0, 200, seed=3, **kw),
+                         _REF[kind](40.0, 200, seed=3, **kw))
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 3])
+def test_tiny_traces(n):
+    for kind in _NEW:
+        _assert_traces_equal(_NEW[kind](10.0, n, seed=5),
+                             _REF[kind](10.0, n, seed=5))
+
+
+def test_custom_mix_and_single_class():
+    _assert_traces_equal(poisson_trace(20.0, 150, seed=9, mix=CUSTOM_MIX),
+                         _ref_poisson(20.0, 150, seed=9, mix=CUSTOM_MIX))
+    one = (DEFAULT_MIX[0],)
+    _assert_traces_equal(diurnal_trace(20.0, 150, seed=9, mix=one),
+                         _ref_diurnal(20.0, 150, seed=9, mix=one))
+
+
+def test_make_trace_dispatch_unchanged():
+    _assert_traces_equal(make_trace("bursty", 30.0, 80, seed=4),
+                         _ref_bursty(30.0, 80, seed=4))
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        make_trace("weekly", 1.0, 1)
+    with pytest.raises(ValueError, match="positive"):
+        make_trace("poisson", 0.0, 1)
+
+
+def test_determinism_across_calls():
+    a = diurnal_trace(50.0, 300, seed=11)
+    b = diurnal_trace(50.0, 300, seed=11)
+    assert a == b
+    assert a != diurnal_trace(50.0, 300, seed=12)

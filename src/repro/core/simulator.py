@@ -952,6 +952,14 @@ class ClusterResult:
     # events="agg" replaces the tuple log with this reduction (None in
     # "full" mode; both None under events=None)
     event_agg: Optional[EventAggregate] = None
+    # paged-KV occupancy extras (zero without a ``kv=`` model)
+    kv_hits: int = 0                    # follow-up turns that reused a
+    #                                     resident session's KV prefix
+    kv_hit_tokens: float = 0.0          # prompt tokens NOT re-prefilled
+    kv_delayed: int = 0                 # admissions delayed by block
+    #                                     pressure
+    kv_evictions: int = 0               # resident sessions evicted (LRU)
+    peak_kv_blocks: Tuple[int, ...] = ()    # per-group peak block use
 
     @property
     def throughput(self) -> float:
@@ -1156,6 +1164,177 @@ class ControlSignals:
     queue_len: Tuple[int, ...]
     util: Tuple[float, ...]
     eligible: Tuple[bool, ...]
+    # per-group KV-block utilization at ``now`` (empty without a
+    # ``kv=`` occupancy model — the default keeps old callers intact)
+    kv_util: Tuple[float, ...] = ()
+
+
+# --------------------------------------------------------------------- #
+# Paged-KV occupancy: the DES mirror of serving/kvpool.PagedKvCache
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _KvGroup:
+    """One group's block-pool state inside :class:`KvPoolModel`."""
+    capacity: int
+    free: int
+    # (finish, seq, blocks, session, tokens) — sessions still decoding
+    active: List[Tuple] = dataclasses.field(default_factory=list)
+    # session -> [blocks, tokens, last_use]; insertion order == LRU
+    resident: Dict = dataclasses.field(default_factory=dict)
+    # rid -> (blocks, tokens) between admit() and release()
+    pending: Dict[int, Tuple[int, int]] = \
+        dataclasses.field(default_factory=dict)
+    peak: int = 0
+
+
+class KvPoolModel:
+    """Per-group paged-KV occupancy for the DES.
+
+    Each group owns ``pool_blocks`` blocks of ``block_tokens`` tokens.
+    An admitted request holds ``ceil((prompt + output) / block_tokens)``
+    blocks from admission to completion; a completed SESSION stays
+    resident (cache retained) until block pressure evicts it LRU.
+    Three observable effects feed the serving loop:
+
+      * **prefix/session cache hits** — a follow-up turn routed to the
+        group where its session is resident skips re-prefilling the
+        cached prefix (``scale_prompt`` shrinks): the measured benefit
+        side of decode-session affinity;
+      * **delayed admission** — out of free blocks, a request waits for
+        the earliest active finish (``kv_delayed`` counts these);
+      * **memory-pressure signal** — per-group block utilization
+        reaches routers (``kv_util_fn`` penalty) and controllers
+        (:class:`ControlSignals.kv_util`).
+
+    ``base_prompt``/``base_output`` convert request scales back to
+    token counts (the inverse of ``HeteroCluster.to_cluster_request``).
+    Deterministic, and strictly opt-in: ``simulate_deployment(kv=None)``
+    is bit-identical to not having the model at all.
+    """
+
+    def __init__(self, block_tokens: int = 64, pool_blocks: int = 1024,
+                 *, base_prompt: int = 1024, base_output: int = 256):
+        assert block_tokens >= 1 and pool_blocks >= 1
+        assert base_prompt >= 1 and base_output >= 1
+        self.block_tokens = block_tokens
+        self.pool_blocks = pool_blocks
+        self.base_prompt = base_prompt
+        self.base_output = base_output
+        self._g: List[_KvGroup] = []
+        self._seq = 0
+        self.hits = 0
+        self.hit_tokens = 0.0
+        self.delayed = 0
+        self.evictions = 0
+
+    def bind(self, n_groups: int) -> "KvPoolModel":
+        """Fresh per-group state for one simulation run (idempotent —
+        a model instance can be reused across runs)."""
+        self._g = [_KvGroup(self.pool_blocks, self.pool_blocks)
+                   for _ in range(n_groups)]
+        self._seq = 0
+        self.hits = 0
+        self.hit_tokens = 0.0
+        self.delayed = 0
+        self.evictions = 0
+        return self
+
+    # -------------------------------------------------------------- #
+    def prompt_tokens(self, req: ClusterRequest) -> int:
+        return max(1, round(req.scale_prompt * self.base_prompt))
+
+    def _blocks(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.block_tokens))
+
+    def _expire(self, st: _KvGroup, t: float) -> None:
+        """Finished actives become resident (cache retained); a
+        sessionless request's blocks free immediately."""
+        while st.active and st.active[0][0] <= t:
+            fin, _, blocks, session, tokens = heapq.heappop(st.active)
+            if session is None:
+                st.free += blocks
+                continue
+            old = st.resident.pop(session, None)
+            if old is not None:
+                st.free += old[0]
+            st.resident[session] = [blocks, tokens, fin]
+
+    # -------------------------------------------------------------- #
+    def cached(self, g: int, session, t: float) -> int:
+        """Tokens of ``session``'s KV resident on group ``g`` at ``t``
+        (0 when absent).  Touches the entry's LRU position."""
+        st = self._g[g]
+        self._expire(st, t)
+        ent = st.resident.pop(session, None)
+        if ent is None:
+            return 0
+        ent[2] = t
+        st.resident[session] = ent      # reinsert == move to MRU end
+        return ent[1]
+
+    def admit(self, g: int, req: ClusterRequest, at: float) -> float:
+        """Reserve blocks for ``req`` on group ``g``; returns the
+        admission time (``>= at`` — later when the request had to wait
+        for blocks).  Pressure order: evict idle resident sessions
+        LRU, then wait for the earliest active finish."""
+        st = self._g[g]
+        t = at
+        self._expire(st, t)
+        p = self.prompt_tokens(req)
+        o = max(1, round(req.scale_output * self.base_output))
+        need = min(self._blocks(p + o), st.capacity)
+        if req.session is not None:
+            # a resident prior turn re-admits: its blocks roll into
+            # the new (accumulated-context) reservation
+            old = st.resident.pop(req.session, None)
+            if old is not None:
+                st.free += old[0]
+        delayed = False
+        while st.free < need:
+            if st.resident:
+                lru = next(iter(st.resident))
+                st.free += st.resident.pop(lru)[0]
+                self.evictions += 1
+                continue
+            fin, _, blocks, _, _ = heapq.heappop(st.active)
+            st.free += blocks
+            if fin > t:
+                t = fin
+                delayed = True
+        st.free -= need
+        st.pending[req.rid] = (need, p + o)
+        st.peak = max(st.peak, st.capacity - st.free)
+        if delayed:
+            self.delayed += 1
+        return t
+
+    def release(self, g: int, req: ClusterRequest,
+                finish: float) -> None:
+        """Hand the request's blocks to the finish heap: they free (or
+        turn resident) once the decode completes at ``finish``."""
+        st = self._g[g]
+        ent = st.pending.pop(req.rid, None)
+        if ent is None:
+            return
+        self._seq += 1
+        heapq.heappush(st.active,
+                       (finish, self._seq, ent[0], req.session, ent[1]))
+
+    def clear(self, g: int) -> None:
+        """Hard reset one group (its pool died with a failed group)."""
+        self._g[g] = _KvGroup(self.pool_blocks, self.pool_blocks)
+
+    # -------------------------------------------------------------- #
+    def util_at(self, g: int, t: float) -> float:
+        st = self._g[g]
+        self._expire(st, t)
+        return (st.capacity - st.free) / st.capacity
+
+    def util_vec(self, t: float) -> Tuple[float, ...]:
+        return tuple(self.util_at(g, t) for g in range(len(self._g)))
+
+    def peaks(self) -> Tuple[int, ...]:
+        return tuple(st.peak for st in self._g)
 
 
 def simulate_deployment(replicas: Sequence[ReplicaModel],
@@ -1166,7 +1345,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                         timeline: Sequence[ControlEvent] = (),
                         controller=None,
                         start_ineligible: Sequence[int] = (),
-                        events: Optional[str] = "full"
+                        events: Optional[str] = "full",
+                        kv: Optional[KvPoolModel] = None
                         ) -> ClusterResult:
     """One DES entry point behind every serving surface.
 
@@ -1260,6 +1440,15 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     counters = {"shed": 0, "dropped": 0, "rerouted": 0,
                 "transfers": 0, "transfer_seconds": 0.0}
     avoided0 = int(getattr(route_fn, "transfers_avoided", 0))
+    kvm = kv.bind(len(replicas)) if kv is not None else None
+    # routers that look can see each group's block pressure; the
+    # attribute is absent (not 0.0) when no kv model runs — and is
+    # scrubbed on reuse — so kv-unaware runs stay bit-identical
+    for gi, rep in enumerate(replicas):
+        if kvm is not None:
+            rep.kv_util_fn = (lambda t, g=gi: kvm.util_at(g, t))
+        elif hasattr(rep, "kv_util_fn"):
+            del rep.kv_util_fn
 
     def dispatch(i: int, req: ClusterRequest, now: float,
                  arrival0: float, fresh: bool) -> None:
@@ -1274,6 +1463,23 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         else:
             p_idx, d_idx, admit_at = decision
             admit_at = max(admit_at, req.arrival)
+        if kvm is not None:
+            if req.session is not None and p_idx == d_idx:
+                # follow-up turn landing on its resident group: the
+                # cached prefix is not re-prefilled (session affinity's
+                # measured benefit)
+                got = kvm.cached(d_idx, req.session, admit_at)
+                if got > 0:
+                    p_tok = kvm.prompt_tokens(req)
+                    eff = max(p_tok - got, 1)
+                    if eff < p_tok:
+                        kvm.hits += 1
+                        kvm.hit_tokens += float(p_tok - eff)
+                        req = dataclasses.replace(
+                            req, scale_prompt=eff / kvm.base_prompt)
+            # blocks live on the decode group from admission to finish;
+            # under pressure the admission itself waits
+            admit_at = kvm.admit(d_idx, req, admit_at)
         kv_i = None
         if p_idx == d_idx:
             rep = replicas[p_idx]
@@ -1326,6 +1532,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                 dec.monitor.record_request(
                     finish, finish - kv_at,
                     dec.predicted_phase_service(req, "decode"))
+        if kvm is not None:
+            kvm.release(d_idx, req, finish)
         records[i] = {"served": True, "p": p_idx, "d": d_idx,
                       "finish": finish, "kv_at": kv_at,
                       "kv_i": kv_i,
@@ -1342,6 +1550,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             rep.eligible = False
             if e.kind != "fail":
                 continue            # graceful drain: residents finish
+            if kvm is not None:
+                kvm.clear(e.group)  # the block pool died with the group
             for i, rec in enumerate(records):
                 if rec is None or not rec["served"]:
                     continue
@@ -1397,7 +1607,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             backlog=tuple(r.backlog(te) for r in replicas),
             queue_len=tuple(r.queue_len(te) for r in replicas),
             util=tuple(util),
-            eligible=tuple(r.eligible for r in replicas))
+            eligible=tuple(r.eligible for r in replicas),
+            kv_util=(kvm.util_vec(te) if kvm is not None else ()))
         ctl_counts.update(arrivals=0, shed=0, miss=0)
         for ev in (controller.decide(sig) or ()):
             if ev.time < te:
@@ -1456,7 +1667,12 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         peak_kv_bytes=_peak_concurrent(kv_resident),
         transfers_avoided=int(getattr(route_fn, "transfers_avoided", 0))
         - avoided0,
-        rerouted=counters["rerouted"], dropped=counters["dropped"])
+        rerouted=counters["rerouted"], dropped=counters["dropped"],
+        kv_hits=kvm.hits if kvm is not None else 0,
+        kv_hit_tokens=kvm.hit_tokens if kvm is not None else 0.0,
+        kv_delayed=kvm.delayed if kvm is not None else 0,
+        kv_evictions=kvm.evictions if kvm is not None else 0,
+        peak_kv_blocks=kvm.peaks() if kvm is not None else ())
 
 
 def _peak_concurrent(intervals: Sequence[Tuple[float, float, float]]

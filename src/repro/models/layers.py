@@ -346,6 +346,22 @@ def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
             "v": jnp.zeros(shape, cfg.jnp_dtype)}
 
 
+def make_kv_block_pool(cfg: ModelConfig, pool_blocks: int,
+                       block_tokens: int,
+                       layers: Optional[int] = None) -> Dict[str, Any]:
+    """Zero-initialized paged KV pool (L, P, bt, Hkv, D).
+
+    The pool replaces the per-slot batch axis with a flat block axis: a
+    session's KV lives in ``ceil(tokens / block_tokens)`` pool blocks
+    named by its block table, so resident capacity is bounded by tokens
+    actually held rather than by ``slots * max_len``.
+    """
+    L = layers if layers is not None else cfg.num_layers
+    shape = (L, pool_blocks, block_tokens, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.jnp_dtype),
+            "v": jnp.zeros(shape, cfg.jnp_dtype)}
+
+
 # --------------------------------------------------------------------- #
 # MLP: SwiGLU / GeGLU
 # --------------------------------------------------------------------- #

@@ -745,6 +745,57 @@ def import_kv_shard(cfg: ModelConfig, cache: Params, slot: int,
     return new
 
 
+# --------------------------------------------------------------------- #
+# Paged KV blocks: block-granular views over a shared (layer, block)
+# pool.  A session's attention KV is stored as ceil(T / block_tokens)
+# pool blocks named by its block table; one block id spans all layers.
+# pack/gather round-trip through the pool is exact (same dtype, no
+# arithmetic), so parking a session and re-activating it later leaves
+# greedy decode bit-identical to never having left the dense cache.
+# --------------------------------------------------------------------- #
+def kv_block_bytes(cfg: ModelConfig, block_tokens: int,
+                   layers: Optional[int] = None) -> int:
+    """Bytes one pool block holds across all layers (K and V)."""
+    L = layers if layers is not None else cfg.num_layers
+    itemsize = jnp.zeros((), cfg.jnp_dtype).dtype.itemsize
+    return 2 * L * block_tokens * cfg.num_kv_heads * cfg.head_dim \
+        * itemsize
+
+
+def pack_kv_blocks(pool: Params, state: Params, block_ids) -> Params:
+    """Scatter a batch-1 exported attention-KV state (L, 1, T, Hkv, D)
+    into pool blocks ``block_ids`` — one functional update per
+    component.  T is zero-padded up to ``len(block_ids) * block_tokens``
+    (the tail of the last block is unused capacity)."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    bt = pool["k"].shape[2]
+    new = {}
+    for c in ("k", "v"):
+        val = state[c][:, 0]                       # (L, T, Hkv, D)
+        Lc, T = val.shape[0], val.shape[1]
+        need = int(ids.shape[0]) * bt
+        if T < need:
+            val = jnp.pad(val, ((0, 0), (0, need - T), (0, 0), (0, 0)))
+        blocks = val[:, :need].reshape(
+            Lc, int(ids.shape[0]), bt, *val.shape[2:])
+        new[c] = pool[c].at[:, ids].set(blocks.astype(pool[c].dtype))
+    return new
+
+
+def gather_kv_blocks(pool: Params, block_ids, length: int) -> Params:
+    """Inverse of :func:`pack_kv_blocks`: gather ``block_ids`` from the
+    pool and return a batch-1 state (L, 1, length, Hkv, D) — the exact
+    payload :func:`import_kv` installs into a dense cache slot."""
+    ids = jnp.asarray(block_ids, jnp.int32)
+    out = {}
+    for c in ("k", "v"):
+        blocks = pool[c][:, ids]                   # (L, nb, bt, Hkv, D)
+        Lc, nb, bt = blocks.shape[:3]
+        flat = blocks.reshape(Lc, nb * bt, *blocks.shape[3:])
+        out[c] = flat[:, :length][:, None]         # (L, 1, T, Hkv, D)
+    return out
+
+
 def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                 cache: Params, pos: jnp.ndarray, *, positions3=None,
                 scan_layers: bool = True) -> Tuple[jnp.ndarray, Params]:

@@ -73,6 +73,12 @@ class AutoscaleConfig:
     cooldown: float = 2.0        # min seconds between actions
     warmup: float = 1.0          # modeled warm-up of an activated group
     headroom: float = 1.3        # capacity >= headroom * demand after down
+    # KV-memory pressure: scale up when the windowed max per-group
+    # KV-block utilization exceeds this.  None (default) ignores the
+    # signal entirely — existing controller runs are bit-identical.
+    # Only meaningful when the DES runs a KvPoolModel (otherwise
+    # ControlSignals.kv_util is empty and the trigger never fires).
+    kv_hi: Optional[float] = None
 
     def __post_init__(self):
         if self.interval <= 0.0:
@@ -281,6 +287,19 @@ class AutoscalePolicy:
         if backlog > self.cfg.queue_hi * (1.0 + h):
             return self._scale_up(
                 sig.now, f"backlog={backlog:.3f}s")
+        if self.cfg.kv_hi is not None:
+            # windowed MAX (not mean) per-group KV-block utilization:
+            # one full pool delays admissions even while others idle
+            kv = 0.0
+            for s in self._win:
+                if not s.kv_util:
+                    continue
+                for g in self.active:
+                    if (g < len(s.kv_util) and s.eligible[g]
+                            and self._warm_at[g] <= s.now):
+                        kv = max(kv, s.kv_util[g])
+            if kv > self.cfg.kv_hi * (1.0 + h):
+                return self._scale_up(sig.now, f"kv_util={kv:.2f}")
         if (shed_rate == 0.0
                 and backlog < self.cfg.queue_lo * (1.0 - h)
                 and util < self.cfg.util_lo * (1.0 - h)):

@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +57,8 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serving.kvpool import (PagedKvCache, SessionManager,
+                                  SessionState)
 
 # Families whose prefill is exact under right-padding (causal attention
 # never reads positions past the query).  Recurrent state (ssm/hybrid)
@@ -72,6 +74,7 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int = 16
     arrival: float = 0.0
+    priority: int = 0                   # preemption rank (higher wins)
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     ttft: float = -1.0
@@ -109,7 +112,11 @@ class ServingEngine:
                  decode_fn: Optional[Callable] = None,
                  prefill_fn: Optional[Callable] = None,
                  sync_every: int = 8,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 kv_block_tokens: Optional[int] = None,
+                 kv_pool_blocks: Optional[int] = None,
+                 spill: bool = True,
+                 preempt_priority: bool = True):
         assert cfg.family in ("dense", "moe", "ssm", "hybrid"), \
             "engine serves decoder-only families"
         assert sync_every >= 1
@@ -138,6 +145,24 @@ class ServingEngine:
         # (recomputed whenever the host view is fresh)
         self._max_remaining = sync_every
         self._clock: Optional[Callable[[], float]] = None
+        # Paged KV residency: sessions beyond the dense decode batch
+        # park their state in a shared block pool (kvpool.PagedKvCache)
+        # and time-slice through the slots at sync boundaries.  With
+        # kv_block_tokens unset the engine is exactly the legacy
+        # fixed-slot machine (self._paged is None everywhere).
+        self.spill = spill
+        self.preempt_priority = preempt_priority
+        self._ran = [0] * slots         # decode steps since activation
+        if kv_block_tokens is not None:
+            pool_blocks = kv_pool_blocks if kv_pool_blocks is not None \
+                else slots * (max_len // kv_block_tokens)
+            self._paged: Optional[PagedKvCache] = PagedKvCache(
+                cfg, pool_blocks, kv_block_tokens, max_len)
+        else:
+            assert kv_pool_blocks is None, \
+                "kv_pool_blocks requires kv_block_tokens"
+            self._paged = None
+        self.sessions = SessionManager(self)
 
         eos = -1 if eos_id is None else int(eos_id)
         temp = float(temperature)
@@ -198,7 +223,9 @@ class ServingEngine:
         return now if now is not None else 0.0
 
     def _any_active(self) -> bool:
-        return any(r is not None for r in self.active)
+        if any(r is not None for r in self.active):
+            return True
+        return self._paged is not None and bool(self._paged.parked())
 
     def _write_slots(self, slots_: List[int], batch_cache: Any,
                      rows: int) -> None:
@@ -237,31 +264,194 @@ class ServingEngine:
         # slot state, and a slot re-filled mid-window would otherwise
         # have its new tokens hidden behind the old -1 idle markers
         self.sync(now)
+        if self._paged is not None:
+            # Paged admission runs in WAVES of up to ``slots`` requests:
+            # each wave prefills into the dense batch, then parks into
+            # the pool to free slots for the next wave — so concurrent
+            # residency is bounded by free BLOCKS, not free slots.
+            left = list(reqs)
+            admitted = 0
+            while left:
+                pairs = self._paged_admit(left, now)
+                if not pairs:
+                    break
+                for group in self._admission_groups(pairs):
+                    self._admit_group(group, now)
+                admitted += len(pairs)
+                left = left[len(pairs):]
+                if left:
+                    self.sync(now)      # settle before parking
+                    wave = {id(r) for _, r in pairs}
+                    for s in range(self.slots):
+                        if self.active[s] is not None \
+                                and id(self.active[s]) in wave:
+                            self._park_slot(s, self._now(now))
+            self._recompute_remaining()
+            return admitted
+
         free = [s for s in range(self.slots) if self.active[s] is None]
         take = list(reqs[:len(free)])
-        if not take:
-            return 0
         for r in take:
             assert len(r.prompt) < self.max_len, \
                 "prompt exceeds engine max_len"
-
-        if self._prefill_custom is not None:
-            # legacy injected prefill: per-request batch-1 path
-            groups = [[(free[i], r)] for i, r in enumerate(take)]
-        elif self.cfg.family in _PAD_SAFE_FAMILIES:
-            groups = [list(zip(free, take))]
-        else:
-            by_len: Dict[int, List] = {}
-            slot_iter = iter(free)
-            for r in take:
-                by_len.setdefault(len(r.prompt), []).append(
-                    (next(slot_iter), r))
-            groups = list(by_len.values())
-
-        for group in groups:
+        pairs = list(zip(free, take))
+        if not pairs:
+            return 0
+        for group in self._admission_groups(pairs):
             self._admit_group(group, now)
         self._recompute_remaining()
-        return len(take)
+        return len(pairs)
+
+    def _admission_groups(self, pairs: List[Tuple[int, "Request"]]
+                          ) -> List[List]:
+        """Partition admitted (slot, req) pairs into prefill groups:
+        one padded batch for attention families, exact-length groups
+        for recurrent families, batch-1 for injected prefill."""
+        if self._prefill_custom is not None:
+            return [[p] for p in pairs]
+        if self.cfg.family in _PAD_SAFE_FAMILIES:
+            return [pairs]
+        by_len: Dict[int, List] = {}
+        for s, r in pairs:
+            by_len.setdefault(len(r.prompt), []).append((s, r))
+        return list(by_len.values())
+
+    def _paged_admit(self, reqs: List[Request],
+                     now: float) -> List[Tuple[int, Request]]:
+        """Paged admission: gated by free-BLOCK pressure, not free
+        slots.  Each request reserves blocks for its worst-case token
+        capacity; under pressure idle parked sessions spill to host
+        (LRU), and with ``preempt_priority`` a strictly lower-priority
+        active session is parked (freeing its slot) and spilled
+        (freeing its blocks).  Returns the admitted (slot, req) pairs.
+        """
+        t = self._now(now)
+        taken: set = set()
+        pairs: List[Tuple[int, Request]] = []
+
+        def free_slot() -> Optional[int]:
+            for s in range(self.slots):
+                if self.active[s] is None and s not in taken:
+                    return s
+            return None
+
+        for r in reqs:
+            assert len(r.prompt) < self.max_len, \
+                "prompt exceeds engine max_len"
+            cap = min(len(r.prompt) + r.max_new_tokens, self.max_len)
+            # blocks FIRST: a request that cannot reserve memory must
+            # not disturb any resident's slot
+            reserved = self._paged.reserve(r, cap, spill=self.spill)
+            while not reserved and self.preempt_priority and self.spill:
+                # block pressure: evict (park + spill) a strictly
+                # lower-priority active — its blocks go to host
+                victim = self._preempt_victim(r.priority, taken)
+                if victim is None:
+                    break
+                vrid = self.active[victim].rid
+                self._park_slot(victim, t)
+                self._paged.spill(vrid)
+                self._paged.preemptions += 1
+                reserved = self._paged.reserve(r, cap,
+                                               spill=self.spill)
+            if not reserved:
+                break
+            slot = free_slot()
+            if slot is None:
+                # no free slot: park a resident of <= priority (equal
+                # priority time-slices fairly; a strictly higher one
+                # is never displaced by admission)
+                victim = self._preempt_victim(r.priority, taken,
+                                              allow_equal=True)
+                if victim is None:
+                    self._paged.release(r.rid)   # roll the blocks back
+                    break
+                self._park_slot(victim, t)
+                self._paged.preemptions += 1
+                slot = victim
+            taken.add(slot)
+            pairs.append((slot, r))
+        return pairs
+
+    def _preempt_victim(self, incoming_prio: int, taken=(),
+                        allow_equal: bool = False) -> Optional[int]:
+        """Slot of the lowest-priority active session below (or, with
+        ``allow_equal``, at) ``incoming_prio`` — ties broken toward
+        the longest-running (round-robin LRU).  Slots in ``taken``
+        (assigned this admission, prefill still pending) are never
+        victims.  None when nothing is preemptible."""
+        if not self.preempt_priority and not allow_equal:
+            return None
+        cands = []
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None or s in taken:
+                continue
+            if req.priority < incoming_prio or \
+                    (allow_equal and req.priority <= incoming_prio):
+                cands.append((req.priority, -self._ran[s], s))
+        return min(cands)[2] if cands else None
+
+    # ------------------------------------------------------------------ #
+    # Paged scheduling: park / activate through the block pool
+    # ------------------------------------------------------------------ #
+    def _park_slot(self, slot: int, t: float) -> None:
+        """Preempt an active slot into the pool: export its state at
+        the current decode cursor and pack it into the session's
+        reserved blocks.  Requires a settled window (call at sync
+        boundaries only); the park -> activate round trip is exact, so
+        resumed greedy decode is bit-identical."""
+        assert not self._cols, "parking requires a settled window"
+        req = self.active[slot]
+        p = int(self.pos[slot])
+        state = M.export_kv(self.cfg, self.cache, slot, p)
+        self._paged.park(req.rid, state, int(self.last_tok[slot]), p,
+                         int(self.budget[slot]), t)
+        self.active[slot] = None
+        self.active_mask = self.active_mask.at[slot].set(False)
+        self._ran[slot] = 0
+
+    def _activate_parked(self, rid: int, slot: int, t: float) -> None:
+        """Resume a parked session into a free slot (prefetching from
+        host spill if needed) and restore its decode cursor."""
+        req = self._paged.resident[rid].req
+        state, last_tok, pos, budget = self._paged.activate(rid, t)
+        self.cache = M.import_kv(self.cfg, self.cache, slot, state)
+        self.pos = self.pos.at[slot].set(pos)
+        self.last_tok = self.last_tok.at[slot].set(last_tok)
+        self.budget = self.budget.at[slot].set(budget)
+        self.active_mask = self.active_mask.at[slot].set(True)
+        self.active[slot] = req
+        self._ran[slot] = 0
+
+    def _schedule(self, now: Optional[float]) -> None:
+        """Round-robin time slicing at sync boundaries: parked
+        sessions activate into free slots FIFO; when none are free,
+        actives that have used up their quantum (``sync_every`` decode
+        steps) rotate out so every resident session makes progress."""
+        runnable = self._paged.parked()
+        if not runnable:
+            return
+        t = self._now(now)
+        changed = False
+        for s in range(self.slots):
+            if not runnable:
+                break
+            if self.active[s] is None:
+                self._activate_parked(runnable.pop(0), s, t)
+                changed = True
+        if runnable:
+            expired = sorted(
+                (s for s in range(self.slots)
+                 if self.active[s] is not None
+                 and self._ran[s] >= self.sync_every),
+                key=lambda s: -self._ran[s])
+            for s in expired[:len(runnable)]:
+                self._park_slot(s, t)
+                self._activate_parked(runnable.pop(0), s, t)
+                changed = True
+        if changed:
+            self._recompute_remaining()
 
     def _admit_group(self, group: List, now: float) -> None:
         slots_ = [s for s, _ in group]
@@ -371,353 +561,63 @@ class ServingEngine:
                                 off, jnp.asarray(rel, jnp.int32))
 
     # ------------------------------------------------------------------ #
-    # Prefill/decode disaggregation: two-engine state handoff
+    # Legacy session-mover shims.  The implementation lives behind the
+    # unified ``engine.sessions`` facade (kvpool.SessionManager); these
+    # names remain for compatibility and translate to/from the old
+    # wire dicts with bit-identical tokens, errors, and TTFT stamps.
+    # New code should call ``engine.sessions`` directly.
     # ------------------------------------------------------------------ #
     def prefill_handoff(self, req: Request,
                         now: Optional[float] = None) -> Dict[str, Any]:
-        """Run ``req``'s prompt on THIS engine and package the result
-        for a decode-only peer (the real-engine analogue of the
-        simulator's KV-transfer edge).
-
-        The prefill runs in a private batch-1 cache — no decode slot is
-        consumed on the prefill engine — and the returned handoff dict
-        carries the per-request state (``export_kv``), the first sampled
-        token, and the wire size.  Feed it to a second engine's
-        :meth:`admit_handoff` to continue decoding there; greedy decode
-        is bit-identical to never having left this engine.
-
-        The request's TTFT is stamped by ``admit_handoff`` (the first
-        token cannot stream before the state lands on the decode
-        engine — same accounting as the simulator's KV-transfer edge)
-        unless the request finishes at prefill, in which case it is
-        finalized here.
-        """
-        assert len(req.prompt) < self.max_len, "prompt exceeds max_len"
-        plen = len(req.prompt)
-        # pad-safe families bucket the prefill length to a multiple of
-        # 8 like admit_batch (exact under causal masking + last_pos
-        # selection; the export below trims to the true length), so a
-        # varied-length trace compiles O(log max_len) prefill variants
-        # instead of one per distinct length.  Recurrent families must
-        # stay exact-length.
-        if self.cfg.family in _PAD_SAFE_FAMILIES:
-            S = min(-(-plen // 8) * 8, self.max_len - 1)
-        else:
-            S = plen
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :plen] = req.prompt
-        cache1 = M.init_cache(self.cfg, 1, self.max_len)
-        if self._prefill_custom is not None:
-            logits, cache1 = self._prefill_custom(
-                self.params, cache1,
-                jnp.asarray(toks[:, :plen], jnp.int32))
-        else:
-            logits, cache1 = self._prefill(
-                cache1, jnp.asarray(toks, jnp.int32),
-                jnp.asarray([plen - 1], jnp.int32))
-        jax.block_until_ready(logits)
-        t_ready = self._now(now)
-        first = int(self._sample_host(logits)[0])
-        self.stats.prefill_batches += 1
-        req.output.append(first)
-        live = req.max_new_tokens > 1 and not (
-            self.eos_id is not None and first == self.eos_id)
-        if not live:        # done at prefill: nothing to hand off
-            req.ttft = t_ready
-            self._finalize(req, t_ready)
-            return {"rid": req.rid, "state": None, "last_tok": first,
-                    "pos": plen, "budget": 0, "kv_bytes": 0,
-                    "done": True}
-        state = M.export_kv(self.cfg, cache1, 0, plen)
-        return {"rid": req.rid, "state": state, "last_tok": first,
-                "pos": plen, "budget": req.max_new_tokens - 1,
-                "kv_bytes": M.kv_state_bytes(state), "done": False}
+        """Deprecated shim over ``sessions.prefill``: run ``req``'s
+        prompt here and package the state for a decode-only peer as
+        the legacy handoff dict."""
+        return self.sessions.prefill(req, now).to_legacy()
 
     def prefill_handoff_stream(self, req: Request,
                                now: Optional[float] = None,
                                chunk_size: Optional[int] = None):
-        """Pipelined handoff: a generator that prefills the prompt in
-        chunks and yields (layer, chunk) KV shards the moment they are
-        computed; the FINAL item is the header dict (the
-        :meth:`prefill_handoff` schema with ``state=None`` — the state
-        already went out as shards).
-
-        A consumer that installs shards as they arrive
-        (:meth:`admit_handoff_stream`, or a fabric DMA on real
-        hardware) overlaps the KV transfer with the remaining prefill
-        compute — the transfer no longer lands 1:1 in TTFT, which is
-        the engine-side analogue of the simulator's per-chunk
-        KV-transfer events.  Recurrent state (ssm / hybrid mamba) only
-        means anything after the last token, so it streams per layer
-        after the final chunk; ring-buffer SWA caches fall back to
-        whole-prompt prefill and stream per layer only.  Greedy decode
-        from the streamed shards is bit-identical to the serial path.
-
-        Unlike the serial handoff, a request that finishes AT prefill
-        (EOS / budget 1) has already streamed its shards by the time
-        that is known; the ``done`` header tells the consumer to
-        release the reserved slot (the honest cost of eager
-        streaming).
-        """
-        assert len(req.prompt) < self.max_len, "prompt exceeds max_len"
-        plen = len(req.prompt)
-        C = chunk_size or self.prefill_chunk or plen
-        cache1 = M.init_cache(self.cfg, 1, self.max_len)
-        sent = 0
-
-        def shard_item(key, layer, t0=None, t1=None):
-            shard = M.export_kv_shard(self.cfg, cache1, 0, key, layer,
-                                      t0, t1)
-            return {"rid": req.rid, "key": key, "layer": layer,
-                    "t0": t0, "t1": t1, "state": shard,
-                    "bytes": M.kv_state_bytes(shard)}
-
-        if (self._prefill_custom is None
-                and self.cfg.sliding_window is None and C < plen):
-            toks = np.asarray(req.prompt, np.int32).reshape(1, plen)
-            n_kv = M.cache_layer_counts(cache1).get("kv", 0)
-            logits = None
-            for t0, t1, logits, cache1 in M.iter_prefill_chunks(
-                    self.params, self.cfg, toks, cache1, chunk_size=C,
-                    prefill_call=self._chunk_call):
-                # this chunk's K/V planes are final for every layer the
-                # moment the chunk completes: stream them now, while
-                # later chunks still compute
-                for layer in range(n_kv):
-                    item = shard_item("kv", layer, t0, t1)
-                    sent += item["bytes"]
-                    yield item
-            stream_kv_tail = False
-        else:
-            # serial fallback (ring-buffer SWA / injected prefill /
-            # single-chunk prompt): same bucketing as prefill_handoff
-            if self.cfg.family in _PAD_SAFE_FAMILIES:
-                S = min(-(-plen // 8) * 8, self.max_len - 1)
+        """Deprecated shim over ``sessions.stream``: yields the legacy
+        per-(layer, chunk) shard dicts, then the header dict."""
+        for item in self.sessions.stream(req, now, chunk_size):
+            if isinstance(item, SessionState):
+                yield item.to_legacy(header=True)
             else:
-                S = plen
-            toks = np.zeros((1, S), np.int32)
-            toks[0, :plen] = req.prompt
-            if self._prefill_custom is not None:
-                logits, cache1 = self._prefill_custom(
-                    self.params, cache1,
-                    jnp.asarray(toks[:, :plen], jnp.int32))
-            else:
-                logits, cache1 = self._prefill(
-                    cache1, jnp.asarray(toks, jnp.int32),
-                    jnp.asarray([plen - 1], jnp.int32))
-            stream_kv_tail = True
-
-        for key, L in M.cache_layer_counts(cache1).items():
-            if key == "kv" and not stream_kv_tail:
-                continue        # already streamed per chunk above
-            for layer in range(L):
-                if key == "kv" and self.cfg.sliding_window is None:
-                    item = shard_item(key, layer, 0, plen)
-                else:           # recurrent state / whole SWA ring
-                    item = shard_item(key, layer)
-                sent += item["bytes"]
-                yield item
-
-        jax.block_until_ready(logits)
-        t_ready = self._now(now)
-        first = int(self._sample_host(logits)[0])
-        self.stats.prefill_batches += 1
-        req.output.append(first)
-        live = req.max_new_tokens > 1 and not (
-            self.eos_id is not None and first == self.eos_id)
-        if not live:            # done at prefill: producer finalizes
-            req.ttft = t_ready
-            self._finalize(req, t_ready)
-            yield {"rid": req.rid, "header": True, "state": None,
-                   "last_tok": first, "pos": plen, "budget": 0,
-                   "kv_bytes": sent, "done": True}
-            return
-        yield {"rid": req.rid, "header": True, "state": None,
-               "last_tok": first, "pos": plen,
-               "budget": req.max_new_tokens - 1,
-               "kv_bytes": sent, "done": False}
+                yield item.to_legacy()
 
     def admit_handoff(self, req: Request, handoff: Dict[str, Any],
                       now: Optional[float] = None) -> bool:
-        """decode_only admission: start a session from imported KV /
-        recurrent state instead of a local prefill.  Returns False when
-        no slot is currently free (retry after draining); raises on a
-        handoff that already finished at prefill (retrying can never
-        succeed).  TTFT is stamped HERE: only once the state lands on
-        the decode engine can the first token stream to the client —
-        the same accounting as the simulator's KV-transfer edge."""
-        if handoff["done"]:
-            raise ValueError(
-                f"request {handoff['rid']} finished at prefill; "
-                "there is no decode to admit")
-        assert handoff["pos"] < self.max_len, \
-            "imported state exceeds this engine's max_len"
-        # route through sync's own _now resolution: substituting 0.0
-        # here would stamp wall-clock-mode completions of the settled
-        # window at t=0 instead of the engine clock
-        self.sync(now)
-        free = [s for s in range(self.slots) if self.active[s] is None]
-        if not free:
-            return False
-        slot = free[0]
-        self.cache = M.import_kv(self.cfg, self.cache, slot,
-                                 handoff["state"])
-        req.ttft = self._now(now)
-        self.pos = self.pos.at[slot].set(handoff["pos"])
-        self.last_tok = self.last_tok.at[slot].set(handoff["last_tok"])
-        self.budget = self.budget.at[slot].set(handoff["budget"])
-        self.active_mask = self.active_mask.at[slot].set(True)
-        self.active[slot] = req
-        self._recompute_remaining()
-        return True
+        """Deprecated shim over ``sessions.restore`` with the first
+        token pending: TTFT is stamped on admission.  Raises on a
+        handoff that finished at prefill; returns False when no slot
+        is free."""
+        return self.sessions.restore(
+            req, SessionState.from_legacy(handoff,
+                                          first_token_pending=True),
+            now)
 
     def admit_handoff_stream(self, req: Request, shards,
                              now: Optional[float] = None) -> bool:
-        """Consume a :meth:`prefill_handoff_stream`: reserve a slot,
-        install every (layer, chunk) shard eagerly as it arrives, and
-        start decoding the moment the header (the last item) lands.
+        """Deprecated shim over ``sessions.receive`` (it accepts the
+        legacy shard dicts directly)."""
+        return self.sessions.receive(req, shards, now)
 
-        Pulling from the generator is what drives the producer's next
-        prefill chunk, so installation genuinely interleaves with the
-        remaining prefill compute.  Returns False — without consuming
-        anything — when no slot is free (retry after draining);
-        returns True once the stream is fully consumed, whether a
-        decode session started or the request already finished at
-        prefill on the producer (the ``done`` header releases the
-        reserved slot, so no retry can ever be needed).  TTFT is
-        stamped when the header lands: the first token streams only
-        once the full state is resident, the same accounting as the
-        simulator's overlapped KV-arrival time.
-        """
-        # validate BEFORE reserving or consuming anything: a failure
-        # mid-install would otherwise leak the reserved slot
-        assert len(req.prompt) < self.max_len, \
-            "handoff prompt exceeds this engine's max_len"
-        self.sync(now)
-        free = [s for s in range(self.slots) if self.active[s] is None]
-        if not free:
-            return False
-        slot = free[0]
-        # host-side reservation only: active_mask stays False, so the
-        # decode loop masks the slot until the header activates it
-        self.active[slot] = req
-        header = None
-        # same-window attention-KV shards coalesce into ONE cache
-        # update per chunk (per-shard installs rebuild the whole
-        # batched cache O(layers x chunks) times); stale leftovers in
-        # a released slot are harmless — causal masking hides them and
-        # the next admission overwrites them
-        pend: List = []
-        pend_win = None
-
-        def flush():
-            nonlocal pend, pend_win
-            if pend:
-                self.cache = M.import_kv_window(
-                    self.cfg, self.cache, slot, pend[0][0],
-                    [s for _, s in pend], pend_win[0])
-                pend, pend_win = [], None
-
-        try:
-            for item in shards:
-                if item.get("header"):
-                    header = item
-                    break
-                win = (item.get("t0") or 0, item.get("t1"))
-                if (item["key"] == "kv"
-                        and self.cfg.sliding_window is None):
-                    if pend and (pend_win != win or
-                                 item["layer"] != pend[0][0] + len(pend)):
-                        flush()
-                    pend.append((item["layer"], item["state"]))
-                    pend_win = pend_win or win
-                    continue
-                flush()
-                self.cache = M.import_kv_shard(
-                    self.cfg, self.cache, slot, item["key"],
-                    item["layer"], item["state"], win[0])
-            flush()
-            assert header is not None, \
-                "handoff stream ended without header"
-        except BaseException:
-            self.active[slot] = None    # release the reserved slot
-            raise
-        if header["done"]:          # finished at prefill: free the slot
-            self.active[slot] = None
-            return True
-        assert header["pos"] < self.max_len, \
-            "imported state exceeds this engine's max_len"
-        req.ttft = self._now(now)
-        self.pos = self.pos.at[slot].set(header["pos"])
-        self.last_tok = self.last_tok.at[slot].set(header["last_tok"])
-        self.budget = self.budget.at[slot].set(header["budget"])
-        self.active_mask = self.active_mask.at[slot].set(True)
-        self._recompute_remaining()
-        return True
-
-    # ------------------------------------------------------------------ #
-    # Live migration: drain / resume mid-decode sessions
-    # ------------------------------------------------------------------ #
     def export_sessions(self, now: Optional[float] = None
                         ) -> List[Tuple[Request, Dict[str, Any]]]:
-        """Drain this engine loss-free: settle the buffered window,
-        then package every still-resident session as a migration
-        handoff — the per-slot KV/recurrent state up to the current
-        decode position (``export_kv``) plus the decode cursor
-        (last sampled token, position, remaining budget) — and free
-        the slots.  Feed each item to a peer's :meth:`import_session`;
-        greedy decode continues bit-identically to never having moved
-        (same params, same cache contents, same cursor).
-        """
-        self.sync(now)
-        out: List[Tuple[Request, Dict[str, Any]]] = []
-        if not self._any_active():
-            return out
-        pos = np.asarray(self.pos)
-        last = np.asarray(self.last_tok)
-        budget = np.asarray(self.budget)
-        for slot in range(self.slots):
-            req = self.active[slot]
-            if req is None:
-                continue
-            state = M.export_kv(self.cfg, self.cache, slot,
-                                int(pos[slot]))
-            out.append((req, {
-                "rid": req.rid, "state": state,
-                "last_tok": int(last[slot]), "pos": int(pos[slot]),
-                "budget": int(budget[slot]),
-                "kv_bytes": M.kv_state_bytes(state), "done": False}))
-            self.active[slot] = None
-            self.active_mask = self.active_mask.at[slot].set(False)
-        self._recompute_remaining()
-        return out
+        """Deprecated shim over ``sessions.checkpoint``: drain every
+        resident session as legacy (request, handoff-dict) pairs."""
+        return [(r, st.to_legacy())
+                for r, st in self.sessions.checkpoint(now)]
 
     def import_session(self, req: Request, handoff: Dict[str, Any],
                        now: Optional[float] = None) -> bool:
-        """Resume a migrated mid-decode session (an
-        :meth:`export_sessions` item) on this engine.  Same slot
-        mechanics as :meth:`admit_handoff`, but the request's TTFT is
-        NOT restamped — its first token already streamed from the
-        source engine; migration moves the session, not the client's
-        clock.  Returns False when no slot is free (step/drain and
-        retry)."""
-        assert not handoff["done"], "finished session cannot migrate"
-        assert handoff["pos"] < self.max_len, \
-            "imported state exceeds this engine's max_len"
-        self.sync(now)
-        free = [s for s in range(self.slots) if self.active[s] is None]
-        if not free:
-            return False
-        slot = free[0]
-        self.cache = M.import_kv(self.cfg, self.cache, slot,
-                                 handoff["state"])
-        self.pos = self.pos.at[slot].set(handoff["pos"])
-        self.last_tok = self.last_tok.at[slot].set(handoff["last_tok"])
-        self.budget = self.budget.at[slot].set(handoff["budget"])
-        self.active_mask = self.active_mask.at[slot].set(True)
-        self.active[slot] = req
-        self._recompute_remaining()
-        return True
+        """Deprecated shim over ``sessions.restore`` with the first
+        token NOT pending: migration moves the session, not the
+        client's clock."""
+        return self.sessions.restore(
+            req, SessionState.from_legacy(handoff,
+                                          first_token_pending=False),
+            now)
 
     def warmup(self) -> None:
         """Prime the jitted prefill and fused decode step (the common
@@ -747,8 +647,13 @@ class ServingEngine:
         Dispatch only — sampled tokens and done flags accumulate on
         device and reach the host every ``sync_every`` steps.
         """
-        if not self._any_active():
-            return
+        if not any(r is not None for r in self.active):
+            if self._paged is not None:
+                # no slot decoding but sessions may be parked: settle
+                # and let the scheduler rotate them in
+                self.sync(now)
+            if not any(r is not None for r in self.active):
+                return
         if self._decode_custom is not None:
             logits, self.cache = self._decode_custom(
                 self.params, self.cache, self.last_tok[:, None], self.pos)
@@ -763,37 +668,45 @@ class ServingEngine:
                 self.budget, self.active_mask, self.key)
         self._cols.append(packed)
         self.stats.decode_steps += 1
+        if self._paged is not None:
+            for s in range(self.slots):
+                if self.active[s] is not None:
+                    self._ran[s] += 1
         # sync at the cadence, or as soon as every live slot must have
         # exhausted its budget (avoids masked tail steps at drain)
         if len(self._cols) >= min(self.sync_every, self._max_remaining):
             self.sync(now)
 
     def sync(self, now: float) -> None:
-        """Fetch buffered tokens/flags; settle completions on the host."""
-        if not self._cols:
-            return
-        # one stacked D2H fetch for the whole window, not one per step
-        cols = self._cols[0] if len(self._cols) == 1 else \
-            jnp.stack(self._cols, axis=2)
-        window = np.asarray(cols).reshape(2, self.slots, -1)
-        toks, dones = window[0], window[1]                     # (slots, k)
-        self._cols = []
-        self.stats.host_syncs += 1
-        now = self._now(now)
-        for s in range(self.slots):
-            req = self.active[s]
-            if req is None:
-                continue
-            for k in range(toks.shape[1]):
-                t = int(toks[s, k])
-                if t < 0:           # slot went idle earlier in the window
-                    break
-                req.output.append(t)
-                if dones[s, k]:
-                    self._finalize(req, now)
-                    self.active[s] = None
-                    break
-        self._recompute_remaining()
+        """Fetch buffered tokens/flags; settle completions on the host.
+        On paged engines the settled boundary is also the scheduling
+        point: parked sessions rotate into freed slots here."""
+        if self._cols:
+            # one stacked D2H fetch for the whole window, not one per
+            # step
+            cols = self._cols[0] if len(self._cols) == 1 else \
+                jnp.stack(self._cols, axis=2)
+            window = np.asarray(cols).reshape(2, self.slots, -1)
+            toks, dones = window[0], window[1]             # (slots, k)
+            self._cols = []
+            self.stats.host_syncs += 1
+            t_set = self._now(now)
+            for s in range(self.slots):
+                req = self.active[s]
+                if req is None:
+                    continue
+                for k in range(toks.shape[1]):
+                    t = int(toks[s, k])
+                    if t < 0:       # slot went idle earlier in window
+                        break
+                    req.output.append(t)
+                    if dones[s, k]:
+                        self._finalize(req, t_set)
+                        self.active[s] = None
+                        break
+            self._recompute_remaining()
+        if self._paged is not None:
+            self._schedule(now)
 
     def _recompute_remaining(self) -> None:
         rem = [r.max_new_tokens - len(r.output)
@@ -802,6 +715,8 @@ class ServingEngine:
 
     def _finalize(self, req: Request, now: float) -> None:
         req.finished = now
+        if self._paged is not None:
+            self._paged.release(req.rid)    # no-op if never reserved
         self.stats.completed += 1
         self.stats.ttft.append(req.ttft - req.arrival)
         self.stats.tpot.append(
@@ -820,16 +735,25 @@ class ServingEngine:
             while pending or self._any_active():
                 now = self._clock()
                 if pending and pending[0].arrival <= now \
-                        and None in self.active:
+                        and (None in self.active
+                             or self._paged is not None):
                     # admit every due arrival that fits (admit_batch
-                    # settles the buffered window itself)
+                    # settles the buffered window itself); a paged
+                    # engine may also preempt for a due arrival
                     batch = []
                     nfree = self.active.count(None)
+                    if self._paged is not None:
+                        nfree = max(nfree, 1)
                     while (pending and len(batch) < nfree
                            and pending[0].arrival <= self._clock()):
                         batch.append(pending.pop(0))
                     if batch:
-                        self.admit_batch(batch, self._clock())
+                        n = self.admit_batch(batch, self._clock())
+                        if n < len(batch):
+                            # paged pressure refused the tail: requeue
+                            # (batch holds the earliest arrivals, so
+                            # prepending preserves sort order)
+                            pending = batch[n:] + pending
                 if not self._any_active():
                     if pending:
                         # idle until the next arrival: sleep, don't spin

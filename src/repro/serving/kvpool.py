@@ -1,0 +1,831 @@
+"""Paged KV residency and the unified session-state API.
+
+Two pieces, one file:
+
+* **Paged residency** (`BlockPool`, `PagedKvCache`): a shared
+  (layer, block) pool replaces "one session == one max_len slot" as the
+  engine's memory architecture.  Every admitted session reserves
+  ``ceil(capacity_tokens / block_tokens)`` pool blocks (plus a fixed
+  block cost for recurrent / ring-buffer state that cannot be
+  token-paged), so admission is gated by free-*block* pressure, not
+  free slots.  Sessions time-slice through the small dense decode batch
+  ("park" packs a slot's exported state into its pool blocks;
+  "activate" gathers it back), priority preemption parks the
+  lowest-priority active session, and a hierarchical tier spills idle
+  parked sessions HBM -> host with LRU eviction (peer prefetch pulls a
+  session straight off another engine).  Park -> activate round-trips
+  through ``export_kv``/``import_kv`` with no arithmetic, so resumed
+  greedy decode is bit-identical to never having been preempted.
+
+* **Session API** (`KvSlice`, `SessionState`, `SessionManager`): one
+  coherent surface over what used to be ten KV/session movers.
+  ``engine.sessions`` exposes ``prefill`` / ``stream`` / ``restore`` /
+  ``receive`` / ``checkpoint`` / ``migrate`` / ``prefetch``; the legacy
+  engine methods (``prefill_handoff{,_stream}``,
+  ``admit_handoff{,_stream}``, ``export_sessions`` /
+  ``import_session``) remain as thin deprecated shims that delegate
+  here and translate to the old wire dicts — bit-identical tokens,
+  same error messages, same TTFT accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models import layers as LY
+
+__all__ = ["KvSlice", "SessionState", "BlockPool", "PagedKvCache",
+           "SessionManager"]
+
+
+# ===================================================================== #
+# Payload dataclasses: the session-state wire format
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class KvSlice:
+    """One streamed shard of a session's state: a (component, layer,
+    token-range) slice of the cache pytree plus its wire size.  The
+    unit yielded by :meth:`SessionManager.stream` and consumed by
+    :meth:`SessionManager.receive`."""
+    rid: int
+    component: str                      # "kv" / "rwkv" / "mamba" / ...
+    layer: int
+    t0: Optional[int] = None            # token window [t0, t1) for "kv"
+    t1: Optional[int] = None
+    state: Any = None                   # batch-1 layer-1 pytree
+    nbytes: int = 0
+
+    def to_legacy(self) -> Dict[str, Any]:
+        """The pre-facade stream-shard dict."""
+        return {"rid": self.rid, "key": self.component,
+                "layer": self.layer, "t0": self.t0, "t1": self.t1,
+                "state": self.state, "bytes": self.nbytes}
+
+    @classmethod
+    def from_legacy(cls, item: Dict[str, Any]) -> "KvSlice":
+        return cls(rid=item["rid"], component=item["key"],
+                   layer=item["layer"], t0=item.get("t0"),
+                   t1=item.get("t1"), state=item["state"],
+                   nbytes=item.get("bytes", 0))
+
+
+@dataclasses.dataclass
+class SessionState:
+    """A session's portable decode state: the exported KV / recurrent
+    pytree plus the decode cursor.  ``first_token_pending`` encodes the
+    one behavioural difference between the old admit paths: True means
+    the first token has not streamed to the client yet, so
+    :meth:`SessionManager.restore` stamps TTFT on arrival (the old
+    ``admit_handoff``); False means the session already streamed
+    tokens elsewhere and migration must not touch the client's clock
+    (the old ``import_session``)."""
+    rid: int
+    state: Any                          # cache pytree; None when done
+    last_tok: int
+    pos: int
+    budget: int                         # decode tokens remaining
+    nbytes: int                         # wire size of ``state``
+    done: bool = False
+    first_token_pending: bool = True
+    priority: int = 0
+
+    def to_legacy(self, header: bool = False) -> Dict[str, Any]:
+        """The pre-facade handoff dict (``header=True`` marks the
+        final item of a shard stream)."""
+        d = {"rid": self.rid, "state": self.state,
+             "last_tok": self.last_tok, "pos": self.pos,
+             "budget": self.budget, "kv_bytes": self.nbytes,
+             "done": self.done}
+        if header:
+            d["header"] = True
+        return d
+
+    @classmethod
+    def from_legacy(cls, h: Dict[str, Any],
+                    first_token_pending: bool = True) -> "SessionState":
+        return cls(rid=h["rid"], state=h["state"],
+                   last_tok=h["last_tok"], pos=h["pos"],
+                   budget=h["budget"], nbytes=h["kv_bytes"],
+                   done=h["done"],
+                   first_token_pending=first_token_pending)
+
+
+# ===================================================================== #
+# Block pool allocator
+# ===================================================================== #
+class BlockPool:
+    """Free-list allocator over a fixed set of pool block ids.
+
+    Invariants (property-tested): a block is never handed out twice,
+    and ``free + allocated == n_blocks`` after any interleaving of
+    alloc / release."""
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 1, "pool needs at least one block"
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._owner: Dict[int, int] = {}        # block id -> rid
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated(self) -> int:
+        return len(self._owner)
+
+    def alloc(self, rid: int, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"kv pool exhausted: need {n} blocks, {len(self._free)}"
+                f" free of {self.n_blocks}")
+        ids = [self._free.pop() for _ in range(n)]
+        for b in ids:
+            assert b not in self._owner, "double allocation"
+            self._owner[b] = rid
+        return ids
+
+    def release(self, ids: List[int]) -> None:
+        for b in ids:
+            assert b in self._owner, "freeing an unowned block"
+            del self._owner[b]
+            self._free.append(b)
+
+    def check(self) -> bool:
+        assert self.free + self.allocated == self.n_blocks, \
+            "block accounting broken"
+        assert len(set(self._free)) == self.free, "free-list duplicate"
+        assert not (set(self._free) & set(self._owner)), \
+            "block both free and owned"
+        return True
+
+
+# ===================================================================== #
+# Paged residency: block tables, tiers, park/activate
+# ===================================================================== #
+@dataclasses.dataclass
+class _Resident:
+    """One session's residency record (active in a slot, parked in
+    HBM pool blocks, or spilled to host)."""
+    req: Any
+    block_ids: List[int]
+    capacity: int                       # reserved token capacity
+    priority: int = 0
+    tier: str = "active"                # "active" | "hbm" | "host"
+    payload: Any = None                 # non-token-paged components
+    host: Any = None                    # host copy when tier == "host"
+    last_tok: int = 0
+    pos: int = 0
+    budget: int = 0
+    seq: int = 0                        # FIFO order for scheduling
+    last_use: float = 0.0               # LRU key for spill
+
+
+class PagedKvCache:
+    """The residency layer of a paged engine: a shared (layer, block)
+    attention-KV pool plus per-session block tables, with a host spill
+    tier below it.
+
+    The dense per-slot cache stays the engine's active-decode working
+    set (the jitted hot loop is untouched); this class owns where
+    *resident-but-not-decoding* state lives and how many blocks every
+    session — active or parked — has reserved.
+    """
+
+    def __init__(self, cfg, pool_blocks: int, block_tokens: int,
+                 max_len: int):
+        assert pool_blocks >= 1 and block_tokens >= 1
+        assert max_len % block_tokens == 0, \
+            "max_len must be a multiple of kv_block_tokens"
+        self.cfg = cfg
+        self.block_tokens = block_tokens
+        self.max_len = max_len
+        self.pool = BlockPool(pool_blocks)
+        self.resident: Dict[int, _Resident] = {}
+        self._seq = 0
+        self.spills = 0
+        self.prefetches = 0
+        self.preemptions = 0
+
+        probe = M.init_cache(cfg, 1, max_len)
+        counts = M.cache_layer_counts(probe)
+        # attention KV is token-paged only when the time axis is a real
+        # prefix (ring-buffer SWA slot layout depends on absolute
+        # positions, so the whole ring travels as fixed payload)
+        self.token_paged = ("kv" in counts
+                            and cfg.sliding_window is None)
+        n_kv = counts.get("kv", cfg.num_layers)
+        self.block_bytes = M.kv_block_bytes(cfg, block_tokens,
+                                            layers=n_kv)
+        if self.token_paged:
+            self.arrays = LY.make_kv_block_pool(
+                cfg, pool_blocks, block_tokens, layers=n_kv)
+            fixed = sum(
+                leaf.size * leaf.dtype.itemsize
+                for key, val in probe.items() if key != "kv"
+                for leaf in jax.tree_util.tree_leaves(val))
+        else:
+            self.arrays = None
+            fixed = sum(leaf.size * leaf.dtype.itemsize
+                        for leaf in jax.tree_util.tree_leaves(probe))
+        if self.block_bytes == 0:
+            # pure-recurrent family (no attention KV anywhere): one
+            # session's fixed-size state is the natural block unit
+            self.block_bytes = max(fixed, 1)
+        # fixed per-session block cost for state that cannot be paged
+        self.fixed_blocks = -(-fixed // self.block_bytes) if fixed else 0
+        del probe
+
+    # ---------------------------------------------------------------- #
+    # Accounting
+    # ---------------------------------------------------------------- #
+    def blocks_for(self, tokens: int) -> int:
+        """Reserved blocks for a session of ``tokens`` capacity."""
+        paged = -(-tokens // self.block_tokens) if self.token_paged \
+            else 0
+        return max(paged + self.fixed_blocks, 1)
+
+    def util(self) -> float:
+        return self.pool.allocated / self.pool.n_blocks
+
+    def holds(self, rid: int) -> bool:
+        return rid in self.resident
+
+    def parked(self) -> List[int]:
+        """Parked session rids in FIFO (park-order) sequence."""
+        return sorted((r for r in self.resident
+                       if self.resident[r].tier != "active"),
+                      key=lambda r: self.resident[r].seq)
+
+    # ---------------------------------------------------------------- #
+    # Admission / release
+    # ---------------------------------------------------------------- #
+    def reserve(self, req: Any, capacity: int, *,
+                spill: bool = True) -> bool:
+        """Reserve blocks for a session of ``capacity`` tokens,
+        spilling idle parked sessions (LRU) to host under pressure.
+        Returns False when the pool cannot fit it even after spilling.
+        """
+        capacity = min(capacity, self.max_len)
+        need = self.blocks_for(capacity)
+        while self.pool.free < need and spill and self.spill_lru():
+            pass
+        if self.pool.free < need:
+            return False
+        ids = self.pool.alloc(req.rid, need)
+        self._seq += 1
+        self.resident[req.rid] = _Resident(
+            req=req, block_ids=ids, capacity=capacity,
+            priority=getattr(req, "priority", 0), seq=self._seq)
+        return True
+
+    def release(self, rid: int) -> None:
+        ent = self.resident.pop(rid, None)
+        if ent is not None and ent.block_ids:
+            self.pool.release(ent.block_ids)
+
+    # ---------------------------------------------------------------- #
+    # Park / activate: the slot <-> pool data path
+    # ---------------------------------------------------------------- #
+    def park(self, rid: int, state: Any, last_tok: int, pos: int,
+             budget: int, now: float = 0.0) -> None:
+        """Pack an active session's exported state into its reserved
+        pool blocks (one scatter for the paged KV; recurrent / ring
+        components ride along as fixed payload)."""
+        ent = self.resident[rid]
+        assert ent.tier == "active", "parking a non-active session"
+        if self.token_paged and "kv" in state:
+            nb = -(-max(pos, 1) // self.block_tokens)
+            assert nb * self.block_tokens <= \
+                len(ent.block_ids) * self.block_tokens
+            self.arrays = M.pack_kv_blocks(
+                self.arrays, state["kv"], ent.block_ids[:nb])
+            ent.payload = {k: v for k, v in state.items() if k != "kv"}
+        else:
+            ent.payload = state
+        ent.last_tok, ent.pos, ent.budget = last_tok, pos, budget
+        ent.tier = "hbm"
+        ent.last_use = now
+        self._seq += 1
+        ent.seq = self._seq
+
+    def activate(self, rid: int,
+                 now: float = 0.0) -> Tuple[Any, int, int, int]:
+        """Reassemble a parked session's state (prefetching from host
+        if it was spilled) and mark it active.  Returns
+        ``(state, last_tok, pos, budget)`` — exactly the payload
+        :func:`repro.models.model.import_kv` installs."""
+        ent = self.resident[rid]
+        assert ent.tier != "active", "session already active"
+        if ent.tier == "host":
+            self._prefetch(ent)
+        if self.token_paged and self.arrays is not None \
+                and ent.payload is not None and ent.pos > 0 \
+                and "kv" not in ent.payload:
+            nb = -(-ent.pos // self.block_tokens)
+            kv = M.gather_kv_blocks(self.arrays, ent.block_ids[:nb],
+                                    ent.pos)
+            state = dict(ent.payload)
+            state["kv"] = kv
+        else:
+            state = ent.payload
+        ent.payload = None
+        ent.tier = "active"
+        ent.last_use = now
+        return state, ent.last_tok, ent.pos, ent.budget
+
+    # ---------------------------------------------------------------- #
+    # Hierarchical tier: HBM -> host spill, host -> HBM prefetch
+    # ---------------------------------------------------------------- #
+    def spill(self, rid: int) -> None:
+        """Evict a parked session's blocks to host memory (the full
+        assembled state moves; the HBM blocks are freed)."""
+        ent = self.resident[rid]
+        assert ent.tier == "hbm", "can only spill a parked session"
+        if self.token_paged and ent.pos > 0 and ent.payload is not None:
+            nb = -(-ent.pos // self.block_tokens)
+            state = dict(ent.payload)
+            state["kv"] = M.gather_kv_blocks(
+                self.arrays, ent.block_ids[:nb], ent.pos)
+        else:
+            state = ent.payload
+        ent.host = jax.device_get(state)
+        ent.payload = None
+        self.pool.release(ent.block_ids)
+        ent.block_ids = []
+        ent.tier = "host"
+        self.spills += 1
+
+    def _prefetch(self, ent: _Resident) -> None:
+        """Bring a host-spilled session back into HBM pool blocks."""
+        need = self.blocks_for(ent.capacity)
+        while self.pool.free < need and self.spill_lru(
+                exclude=ent.req.rid):
+            pass
+        ent.block_ids = self.pool.alloc(ent.req.rid, need)
+        state = jax.tree_util.tree_map(jnp.asarray, ent.host)
+        ent.host = None
+        if self.token_paged and "kv" in state and ent.pos > 0:
+            nb = -(-ent.pos // self.block_tokens)
+            self.arrays = M.pack_kv_blocks(
+                self.arrays, state["kv"], ent.block_ids[:nb])
+            ent.payload = {k: v for k, v in state.items() if k != "kv"}
+        else:
+            ent.payload = state
+        ent.tier = "hbm"
+        self.prefetches += 1
+
+    def spill_lru(self, exclude: Optional[int] = None) -> bool:
+        """Spill the least-recently-used HBM-parked session.  Returns
+        False when nothing is spillable (all sessions active or
+        already on host)."""
+        cands = [(ent.last_use, ent.seq, rid)
+                 for rid, ent in self.resident.items()
+                 if ent.tier == "hbm" and rid != exclude]
+        if not cands:
+            return False
+        self.spill(min(cands)[2])
+        return True
+
+    # ---------------------------------------------------------------- #
+    def assemble(self, rid: int) -> Tuple[Any, int, int, int]:
+        """Reassemble a parked session's full state WITHOUT activating
+        it (the checkpoint/drain path) and release its blocks."""
+        ent = self.resident[rid]
+        assert ent.tier != "active", "active sessions export via slots"
+        if ent.tier == "host":
+            state = jax.tree_util.tree_map(jnp.asarray, ent.host)
+        elif self.token_paged and ent.payload is not None \
+                and ent.pos > 0 and "kv" not in ent.payload:
+            nb = -(-ent.pos // self.block_tokens)
+            state = dict(ent.payload)
+            state["kv"] = M.gather_kv_blocks(
+                self.arrays, ent.block_ids[:nb], ent.pos)
+        else:
+            state = ent.payload
+        out = (state, ent.last_tok, ent.pos, ent.budget)
+        self.release(rid)
+        return out
+
+
+# ===================================================================== #
+# SessionManager: the one session-state API
+# ===================================================================== #
+class SessionManager:
+    """``engine.sessions`` — the unified surface over prefill handoff,
+    streamed shard handoff, live migration, and peer prefetch.
+
+    The legacy engine methods are thin shims over these six verbs:
+
+    ======================  =========================================
+    legacy                  facade
+    ======================  =========================================
+    prefill_handoff         ``prefill(req).to_legacy()``
+    prefill_handoff_stream  ``stream(req)`` (KvSlice / SessionState)
+    admit_handoff           ``restore(req, st)`` (first token pending)
+    admit_handoff_stream    ``receive(req, slices)``
+    export_sessions         ``checkpoint()``
+    import_session          ``restore(req, st)`` (token not pending)
+    ======================  =========================================
+
+    plus ``migrate(peer)`` (checkpoint -> peer.restore, loss-free) and
+    ``prefetch(rid, peer)`` (pull ONE session off a peer engine — the
+    top of the HBM -> host -> peer cache hierarchy).
+    """
+
+    def __init__(self, engine):
+        self.eng = engine
+
+    # ---------------------------------------------------------------- #
+    # Producer side: prefill on this engine, state leaves it
+    # ---------------------------------------------------------------- #
+    def prefill(self, req, now: Optional[float] = None) -> SessionState:
+        """Run ``req``'s prompt in a private batch-1 cache (no decode
+        slot consumed) and package the resulting state + cursor.  A
+        request that finishes AT prefill is finalized here and returns
+        ``done=True`` with no state.  TTFT is NOT stamped for live
+        sessions — it belongs to the engine that streams the first
+        token (``restore`` with ``first_token_pending=True``)."""
+        eng = self.eng
+        from repro.serving.engine import _PAD_SAFE_FAMILIES
+        assert len(req.prompt) < eng.max_len, "prompt exceeds max_len"
+        plen = len(req.prompt)
+        if eng.cfg.family in _PAD_SAFE_FAMILIES:
+            S = min(-(-plen // 8) * 8, eng.max_len - 1)
+        else:
+            S = plen
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :plen] = req.prompt
+        cache1 = M.init_cache(eng.cfg, 1, eng.max_len)
+        if eng._prefill_custom is not None:
+            logits, cache1 = eng._prefill_custom(
+                eng.params, cache1,
+                jnp.asarray(toks[:, :plen], jnp.int32))
+        else:
+            logits, cache1 = eng._prefill(
+                cache1, jnp.asarray(toks, jnp.int32),
+                jnp.asarray([plen - 1], jnp.int32))
+        jax.block_until_ready(logits)
+        t_ready = eng._now(now)
+        first = int(eng._sample_host(logits)[0])
+        eng.stats.prefill_batches += 1
+        req.output.append(first)
+        live = req.max_new_tokens > 1 and not (
+            eng.eos_id is not None and first == eng.eos_id)
+        if not live:        # done at prefill: nothing to hand off
+            req.ttft = t_ready
+            eng._finalize(req, t_ready)
+            return SessionState(
+                rid=req.rid, state=None, last_tok=first, pos=plen,
+                budget=0, nbytes=0, done=True,
+                first_token_pending=False,
+                priority=getattr(req, "priority", 0))
+        state = M.export_kv(eng.cfg, cache1, 0, plen)
+        return SessionState(
+            rid=req.rid, state=state, last_tok=first, pos=plen,
+            budget=req.max_new_tokens - 1,
+            nbytes=M.kv_state_bytes(state), done=False,
+            first_token_pending=True,
+            priority=getattr(req, "priority", 0))
+
+    def stream(self, req, now: Optional[float] = None,
+               chunk_size: Optional[int] = None
+               ) -> Iterator[Any]:
+        """Pipelined :meth:`prefill`: yield :class:`KvSlice` shards
+        the moment each (layer, chunk) is computed, then the
+        :class:`SessionState` cursor as the FINAL item (its ``nbytes``
+        is the total shard bytes already streamed; ``state`` is None).
+        Consuming the generator drives the producer's prefill chunks,
+        so a :meth:`receive` on a peer overlaps transfer with the
+        remaining prefill compute."""
+        eng = self.eng
+        from repro.serving.engine import _PAD_SAFE_FAMILIES
+        assert len(req.prompt) < eng.max_len, "prompt exceeds max_len"
+        plen = len(req.prompt)
+        C = chunk_size or eng.prefill_chunk or plen
+        cache1 = M.init_cache(eng.cfg, 1, eng.max_len)
+        sent = 0
+
+        def shard_item(key, layer, t0=None, t1=None):
+            shard = M.export_kv_shard(eng.cfg, cache1, 0, key, layer,
+                                      t0, t1)
+            return KvSlice(rid=req.rid, component=key, layer=layer,
+                           t0=t0, t1=t1, state=shard,
+                           nbytes=M.kv_state_bytes(shard))
+
+        if (eng._prefill_custom is None
+                and eng.cfg.sliding_window is None and C < plen):
+            toks = np.asarray(req.prompt, np.int32).reshape(1, plen)
+            n_kv = M.cache_layer_counts(cache1).get("kv", 0)
+            logits = None
+            for t0, t1, logits, cache1 in M.iter_prefill_chunks(
+                    eng.params, eng.cfg, toks, cache1, chunk_size=C,
+                    prefill_call=eng._chunk_call):
+                # this chunk's K/V planes are final for every layer
+                # the moment the chunk completes: stream them now
+                for layer in range(n_kv):
+                    item = shard_item("kv", layer, t0, t1)
+                    sent += item.nbytes
+                    yield item
+            stream_kv_tail = False
+        else:
+            # serial fallback (ring-buffer SWA / injected prefill /
+            # single-chunk prompt): same bucketing as prefill()
+            if eng.cfg.family in _PAD_SAFE_FAMILIES:
+                S = min(-(-plen // 8) * 8, eng.max_len - 1)
+            else:
+                S = plen
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :plen] = req.prompt
+            if eng._prefill_custom is not None:
+                logits, cache1 = eng._prefill_custom(
+                    eng.params, cache1,
+                    jnp.asarray(toks[:, :plen], jnp.int32))
+            else:
+                logits, cache1 = eng._prefill(
+                    cache1, jnp.asarray(toks, jnp.int32),
+                    jnp.asarray([plen - 1], jnp.int32))
+            stream_kv_tail = True
+
+        for key, n_layers in M.cache_layer_counts(cache1).items():
+            if key == "kv" and not stream_kv_tail:
+                continue        # already streamed per chunk above
+            for layer in range(n_layers):
+                if key == "kv" and eng.cfg.sliding_window is None:
+                    item = shard_item(key, layer, 0, plen)
+                else:           # recurrent state / whole SWA ring
+                    item = shard_item(key, layer)
+                sent += item.nbytes
+                yield item
+
+        jax.block_until_ready(logits)
+        t_ready = eng._now(now)
+        first = int(eng._sample_host(logits)[0])
+        eng.stats.prefill_batches += 1
+        req.output.append(first)
+        live = req.max_new_tokens > 1 and not (
+            eng.eos_id is not None and first == eng.eos_id)
+        if not live:            # done at prefill: producer finalizes
+            req.ttft = t_ready
+            eng._finalize(req, t_ready)
+            yield SessionState(
+                rid=req.rid, state=None, last_tok=first, pos=plen,
+                budget=0, nbytes=sent, done=True,
+                first_token_pending=False,
+                priority=getattr(req, "priority", 0))
+            return
+        yield SessionState(
+            rid=req.rid, state=None, last_tok=first, pos=plen,
+            budget=req.max_new_tokens - 1, nbytes=sent, done=False,
+            first_token_pending=True,
+            priority=getattr(req, "priority", 0))
+
+    # ---------------------------------------------------------------- #
+    # Consumer side: state lands on this engine, decode continues
+    # ---------------------------------------------------------------- #
+    def restore(self, req, st: SessionState,
+                now: Optional[float] = None) -> bool:
+        """Install a session's state and continue decoding here.
+        Stamps TTFT iff ``st.first_token_pending`` (handoff admission:
+        the first token streams only once the state lands); a migrated
+        session keeps its original clock.  Returns False when no slot
+        is free or (paged engines) the pool cannot fit the session
+        even after spilling — retry after draining."""
+        eng = self.eng
+        if st.done:
+            if st.first_token_pending:
+                raise ValueError(
+                    f"request {st.rid} finished at prefill; "
+                    "there is no decode to admit")
+            raise AssertionError("finished session cannot migrate")
+        assert st.pos < eng.max_len, \
+            "imported state exceeds this engine's max_len"
+        eng.sync(now)
+        free = [s for s in range(eng.slots) if eng.active[s] is None]
+        if not free:
+            return False
+        slot = free[0]
+        if eng._paged is not None and not eng._paged.holds(st.rid):
+            cap = min(st.pos + st.budget + 1, eng.max_len)
+            if not eng._paged.reserve(req, cap, spill=eng.spill):
+                return False
+        eng.cache = M.import_kv(eng.cfg, eng.cache, slot, st.state)
+        if st.first_token_pending:
+            req.ttft = eng._now(now)
+        eng.pos = eng.pos.at[slot].set(st.pos)
+        eng.last_tok = eng.last_tok.at[slot].set(st.last_tok)
+        eng.budget = eng.budget.at[slot].set(st.budget)
+        eng.active_mask = eng.active_mask.at[slot].set(True)
+        eng.active[slot] = req
+        eng._ran[slot] = 0
+        eng._recompute_remaining()
+        return True
+
+    def receive(self, req, slices,
+                now: Optional[float] = None) -> bool:
+        """Consume a :meth:`stream` (or legacy shard dicts): reserve a
+        slot, install every shard eagerly as it arrives, and start
+        decoding the moment the final :class:`SessionState` lands.
+        TTFT is stamped at that moment.  Returns False — without
+        consuming anything — when no slot (or, paged, no pool room)
+        is free."""
+        eng = self.eng
+        assert len(req.prompt) < eng.max_len, \
+            "handoff prompt exceeds this engine's max_len"
+        eng.sync(now)
+        free = [s for s in range(eng.slots) if eng.active[s] is None]
+        if not free:
+            return False
+        slot = free[0]
+        reserved = False
+        if eng._paged is not None and not eng._paged.holds(req.rid):
+            cap = min(len(req.prompt) + req.max_new_tokens,
+                      eng.max_len)
+            if not eng._paged.reserve(req, cap, spill=eng.spill):
+                return False
+            reserved = True
+        # host-side reservation only: active_mask stays False, so the
+        # decode loop masks the slot until the cursor activates it
+        eng.active[slot] = req
+        header: Optional[SessionState] = None
+        # same-window attention-KV shards coalesce into ONE cache
+        # update per chunk; stale leftovers in a released slot are
+        # harmless — causal masking hides them and the next admission
+        # overwrites them
+        pend: List = []
+        pend_win = None
+
+        def flush():
+            nonlocal pend, pend_win
+            if pend:
+                eng.cache = M.import_kv_window(
+                    eng.cfg, eng.cache, slot, pend[0][0],
+                    [s for _, s in pend], pend_win[0])
+                pend, pend_win = [], None
+
+        try:
+            for raw in slices:
+                if isinstance(raw, SessionState):
+                    header = raw
+                    break
+                item = raw.to_legacy() if isinstance(raw, KvSlice) \
+                    else raw
+                if item.get("header"):
+                    header = SessionState.from_legacy(item)
+                    break
+                win = (item.get("t0") or 0, item.get("t1"))
+                if (item["key"] == "kv"
+                        and eng.cfg.sliding_window is None):
+                    if pend and (pend_win != win or
+                                 item["layer"] !=
+                                 pend[0][0] + len(pend)):
+                        flush()
+                    pend.append((item["layer"], item["state"]))
+                    pend_win = pend_win or win
+                    continue
+                flush()
+                eng.cache = M.import_kv_shard(
+                    eng.cfg, eng.cache, slot, item["key"],
+                    item["layer"], item["state"], win[0])
+            flush()
+            assert header is not None, \
+                "handoff stream ended without header"
+        except BaseException:
+            eng.active[slot] = None    # release the reserved slot
+            if reserved:
+                eng._paged.release(req.rid)
+            raise
+        if header.done:             # finished at prefill: free the slot
+            eng.active[slot] = None
+            if reserved:
+                eng._paged.release(req.rid)
+            return True
+        assert header.pos < eng.max_len, \
+            "imported state exceeds this engine's max_len"
+        req.ttft = eng._now(now)
+        eng.pos = eng.pos.at[slot].set(header.pos)
+        eng.last_tok = eng.last_tok.at[slot].set(header.last_tok)
+        eng.budget = eng.budget.at[slot].set(header.budget)
+        eng.active_mask = eng.active_mask.at[slot].set(True)
+        eng._ran[slot] = 0
+        eng._recompute_remaining()
+        return True
+
+    # ---------------------------------------------------------------- #
+    # Whole-engine drain / migration / peer prefetch
+    # ---------------------------------------------------------------- #
+    def checkpoint(self, now: Optional[float] = None
+                   ) -> List[Tuple[Any, SessionState]]:
+        """Drain this engine loss-free: settle the buffered window,
+        package every resident session — active slots AND parked /
+        spilled pool residents — as (request, SessionState) with the
+        decode cursor, and free all slots and blocks.  Sessions keep
+        their clocks (``first_token_pending=False``)."""
+        eng = self.eng
+        eng.sync(now)
+        out: List[Tuple[Any, SessionState]] = []
+        if any(r is not None for r in eng.active):
+            pos = np.asarray(eng.pos)
+            last = np.asarray(eng.last_tok)
+            budget = np.asarray(eng.budget)
+            for slot in range(eng.slots):
+                req = eng.active[slot]
+                if req is None:
+                    continue
+                state = M.export_kv(eng.cfg, eng.cache, slot,
+                                    int(pos[slot]))
+                out.append((req, SessionState(
+                    rid=req.rid, state=state,
+                    last_tok=int(last[slot]), pos=int(pos[slot]),
+                    budget=int(budget[slot]),
+                    nbytes=M.kv_state_bytes(state), done=False,
+                    first_token_pending=False,
+                    priority=getattr(req, "priority", 0))))
+                eng.active[slot] = None
+                eng.active_mask = eng.active_mask.at[slot].set(False)
+                if eng._paged is not None:
+                    eng._paged.release(req.rid)
+        if eng._paged is not None:
+            for rid in eng._paged.parked():
+                preq = eng._paged.resident[rid].req
+                state, lt, p, b = eng._paged.assemble(rid)
+                out.append((preq, SessionState(
+                    rid=rid, state=state, last_tok=lt, pos=p,
+                    budget=b, nbytes=M.kv_state_bytes(state),
+                    done=False, first_token_pending=False,
+                    priority=getattr(preq, "priority", 0))))
+        eng._recompute_remaining()
+        return out
+
+    def checkpoint_one(self, rid: int, now: Optional[float] = None
+                       ) -> Optional[Tuple[Any, SessionState]]:
+        """Checkpoint ONE resident session by rid (active or parked),
+        freeing its slot/blocks.  Returns None when this engine does
+        not hold it — the probe a peer prefetch uses."""
+        eng = self.eng
+        eng.sync(now)
+        for slot in range(eng.slots):
+            req = eng.active[slot]
+            if req is None or req.rid != rid:
+                continue
+            p = int(np.asarray(eng.pos)[slot])
+            state = M.export_kv(eng.cfg, eng.cache, slot, p)
+            st = SessionState(
+                rid=rid, state=state,
+                last_tok=int(np.asarray(eng.last_tok)[slot]), pos=p,
+                budget=int(np.asarray(eng.budget)[slot]),
+                nbytes=M.kv_state_bytes(state), done=False,
+                first_token_pending=False,
+                priority=getattr(req, "priority", 0))
+            eng.active[slot] = None
+            eng.active_mask = eng.active_mask.at[slot].set(False)
+            if eng._paged is not None:
+                eng._paged.release(rid)
+            eng._recompute_remaining()
+            return req, st
+        if eng._paged is not None and eng._paged.holds(rid):
+            preq = eng._paged.resident[rid].req
+            state, lt, p, b = eng._paged.assemble(rid)
+            return preq, SessionState(
+                rid=rid, state=state, last_tok=lt, pos=p, budget=b,
+                nbytes=M.kv_state_bytes(state), done=False,
+                first_token_pending=False,
+                priority=getattr(preq, "priority", 0))
+        return None
+
+    def migrate(self, peer, now: Optional[float] = None) -> int:
+        """Move every resident session to ``peer`` loss-free
+        (checkpoint -> peer restore, clocks preserved).  Sessions the
+        peer cannot take are re-imported locally; returns the number
+        actually moved."""
+        dst = peer.sessions if hasattr(peer, "sessions") else peer
+        moved = 0
+        for req, st in self.checkpoint(now):
+            if dst.restore(req, st, now):
+                moved += 1
+            else:
+                ok = self.restore(req, st, now)
+                assert ok, "failed to re-import unmigrated session"
+        return moved
+
+    def prefetch(self, rid: int, peer,
+                 now: Optional[float] = None) -> bool:
+        """Pull ONE session off ``peer`` into this engine — the peer
+        tier of the HBM -> host -> peer cache hierarchy.  Returns
+        False when the peer does not hold it or this engine cannot
+        fit it (the session is returned to the peer)."""
+        src = peer.sessions if hasattr(peer, "sessions") else peer
+        item = src.checkpoint_one(rid, now)
+        if item is None:
+            return False
+        req, st = item
+        if self.restore(req, st, now):
+            return True
+        back = src.restore(req, st, now)
+        assert back, "failed to return prefetched session to peer"
+        return False

@@ -127,12 +127,21 @@ class JSEDRouter(Router):
     name = "jsed"
 
     def __init__(self, affinity_break: float = float("inf"),
-                 slo_shed: bool = False):
+                 slo_shed: bool = False,
+                 session_affinity: bool = True,
+                 kv_penalty: float = 0.0):
         # Migrate a session when staying costs this many more seconds
         # of backlog than the best replica; inf = never migrate.
         self.affinity_break = affinity_break
         # Shed a request when even the best replica cannot meet its SLO.
         self.slo_shed = slo_shed
+        # False disables the home shortcut entirely — the measured
+        # baseline for the affinity-ON-vs-OFF goodput comparison.
+        self.session_affinity = session_affinity
+        # Seconds of score penalty at 100% KV-block utilization; only
+        # felt when the DES runs a KvPoolModel (replicas then carry a
+        # kv_util_fn), so 0.0 and kv-less runs stay bit-identical.
+        self.kv_penalty = kv_penalty
         self._session_home: Dict[int, int] = {}
 
     def score(self, req: ClusterRequest, replica: ReplicaModel,
@@ -162,13 +171,21 @@ class JSEDRouter(Router):
         rep = replicas[cand[0]]
         best = cand[0]
         best_s = rep.backlog(now) + rep.predicted_service(req)
+        if self.kv_penalty:
+            kv = getattr(rep, "kv_util_fn", None)
+            if kv is not None:
+                best_s += self.kv_penalty * kv(now)
         for i in cand[1:]:
             rep = replicas[i]
             s = rep.backlog(now) + rep.predicted_service(req)
+            if self.kv_penalty:
+                kv = getattr(rep, "kv_util_fn", None)
+                if kv is not None:
+                    s += self.kv_penalty * kv(now)
             if s < best_s:
                 best, best_s = i, s
         choice = best
-        if req.session is not None:
+        if self.session_affinity and req.session is not None:
             home = self._session_home.get(req.session)
             if home is not None and not getattr(replicas[home],
                                                 "eligible", True):
@@ -189,7 +206,7 @@ class JSEDRouter(Router):
         # past admission control
         if self._shed(req, replicas[choice], now):
             return -1
-        if req.session is not None:
+        if self.session_affinity and req.session is not None:
             self._session_home[req.session] = choice
         return choice
 

@@ -50,7 +50,8 @@ from repro.core.costmodel import CATALOG, Calibration, calibrate
 from repro.core.monitor import MonitorConfig
 from repro.core.simulator import (_EVENT_ORDER, ClusterRequest,
                                   ClusterResult, ControlEvent,
-                                  Interconnect, simulate_deployment)
+                                  Interconnect, KvPoolModel,
+                                  simulate_deployment)
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import ROUTERS, make_router
 from repro.serving.workload import WorkloadRequest, assign_slos
@@ -58,7 +59,9 @@ from repro.serving.workload import WorkloadRequest, assign_slos
 _SLO_KEYS = frozenset({"base", "per_output_token", "ttft"})
 _IC_KEYS = frozenset({"default_bw", "base_latency", "bw"})
 _ENGINE_KEYS = frozenset({"slots", "max_len", "sync_every",
-                          "temperature", "seed", "smoke"})
+                          "temperature", "seed", "smoke",
+                          "kv_block_tokens", "kv_pool_blocks",
+                          "spill", "preempt_priority"})
 _POLICIES = ("latency", "throughput")
 
 
@@ -84,7 +87,12 @@ class DeploymentSpec:
     ``costmodel.calibrate``) scaling the DES service profiles by
     measured wall/model ratios.  ``engine`` carries launch-time knobs
     (``slots``, ``max_len``, ``sync_every``, ``temperature``,
-    ``seed``, ``smoke``).
+    ``seed``, ``smoke``) plus the paged-KV knobs
+    (``kv_block_tokens``, ``kv_pool_blocks``, ``spill``,
+    ``preempt_priority``) — setting ``kv_block_tokens`` turns on
+    block-pooled session memory in BOTH backends: real engines page
+    their KV, and the DES runs a matching ``KvPoolModel`` (per-group
+    occupancy, delayed admission, prefix/session cache hits).
 
     Validated at construction; every field is JSON-serializable and
     ``from_json(spec.to_json()) == spec``.
@@ -151,6 +159,21 @@ class DeploymentSpec:
         if bad:
             raise ValueError(f"unknown engine keys {sorted(bad)}; "
                              f"pick from {sorted(_ENGINE_KEYS)}")
+        bt = self.engine.get("kv_block_tokens")
+        pool = self.engine.get("kv_pool_blocks")
+        if pool is not None and bt is None:
+            raise ValueError("kv_pool_blocks requires kv_block_tokens")
+        if bt is not None:
+            if int(bt) < 1:
+                raise ValueError(f"kv_block_tokens must be >= 1, "
+                                 f"got {bt}")
+            ml = int(self.engine.get("max_len", 64))
+            if ml % int(bt):
+                raise ValueError(f"kv_block_tokens={bt} must divide "
+                                 f"max_len={ml}")
+            if pool is not None and int(pool) < 1:
+                raise ValueError(f"kv_pool_blocks must be >= 1, "
+                                 f"got {pool}")
         if self.initial_policy not in _POLICIES:
             raise ValueError(f"initial_policy must be one of "
                              f"{_POLICIES}, got {self.initial_policy!r}")
@@ -181,6 +204,37 @@ class DeploymentSpec:
     def calibration_model(self) -> Optional[Calibration]:
         return (calibrate(self.calibration)
                 if self.calibration is not None else None)
+
+    def kv_config(self) -> Optional[Dict[str, Any]]:
+        """Resolved paged-KV knobs, or ``None`` when the spec doesn't
+        page.  The ``slots=`` shim: without an explicit
+        ``kv_pool_blocks`` the pool is sized to exactly the fixed-slot
+        footprint (``slots * max_len / kv_block_tokens`` blocks), so
+        turning paging on changes the memory LAYOUT, not the budget."""
+        bt = self.engine.get("kv_block_tokens")
+        if bt is None:
+            return None
+        bt = int(bt)
+        slots = int(self.engine.get("slots", 4))
+        max_len = int(self.engine.get("max_len", 64))
+        pool = self.engine.get("kv_pool_blocks")
+        pool = int(pool) if pool is not None else slots * (max_len // bt)
+        return {"kv_block_tokens": bt, "kv_pool_blocks": pool,
+                "spill": bool(self.engine.get("spill", True)),
+                "preempt_priority":
+                    bool(self.engine.get("preempt_priority", True))}
+
+    def kv_model(self) -> Optional[KvPoolModel]:
+        """DES occupancy model matching the engine knobs (``None``
+        when not paging — the DES then runs bit-identically to before
+        paging existed)."""
+        kvc = self.kv_config()
+        if kvc is None:
+            return None
+        return KvPoolModel(kvc["kv_block_tokens"],
+                           kvc["kv_pool_blocks"],
+                           base_prompt=self.base_prompt,
+                           base_output=self.base_output)
 
     # ------------------------------------------------------------------ #
     def to_json(self, indent: Optional[int] = 2) -> str:
@@ -515,7 +569,8 @@ class Deployment:
             timeline=timeline,
             controller=controller,
             start_ineligible=sorted(self._reserve),
-            events=events)
+            events=events,
+            kv=self.spec.kv_model())
 
     # ------------------------------------------------------------------ #
     def launch(self, cfg=None, params=None) -> "LaunchedDeployment":
@@ -572,6 +627,12 @@ class LaunchedDeployment:
                       max_len=self.max_len,
                       temperature=float(ekw.get("temperature", 0.0)),
                       seed=int(ekw.get("seed", 0)))
+        kvc = spec.kv_config()
+        if kvc is not None:
+            common.update(kv_block_tokens=kvc["kv_block_tokens"],
+                          kv_pool_blocks=kvc["kv_pool_blocks"],
+                          spill=kvc["spill"],
+                          preempt_priority=kvc["preempt_priority"])
         sync_every = int(ekw.get("sync_every", 4))
         self._engine_kw = dict(common, sync_every=sync_every)
         self._actions: List[Dict[str, Any]] = []

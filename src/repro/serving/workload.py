@@ -2,13 +2,16 @@
 
 Real serving traffic is open-loop (arrivals do not wait for service) and
 bursty; the cluster benchmarks and tests drive the simulator with traces
-from three arrival processes:
+from four arrival processes:
 
   * ``poisson``  — homogeneous Poisson at ``rate`` req/s,
   * ``bursty``   — 2-state MMPP: ON periods at ``burst_factor`` x the
     base rate alternating with quiet OFF periods (same long-run rate),
   * ``diurnal``  — sinusoidally modulated rate (a compressed day/night
-    cycle), sampled by thinning against the peak rate.
+    cycle), sampled by thinning against the peak rate,
+  * ``chat``     — multi-turn sessions with accumulated context: each
+    turn's prompt extends the conversation so far (the workload paged
+    KV and session-cache hits are built for).
 
 Request sizes come from a mixture of named request classes (chat,
 summarization, generation) with lognormal prompt lengths and geometric
@@ -177,9 +180,14 @@ def _sample_lengths_block(rng: random.Random, n: int,
     return prompt.tolist(), output.tolist()
 
 
-def _attach_sessions(rng: random.Random, n: int,
-                     follow_prob: float) -> List[Optional[int]]:
-    """With prob ``follow_prob`` a request continues a live session."""
+def _attach_sessions(rng: random.Random, n: int, follow_prob: float,
+                     session_pool: int = 64) -> List[Optional[int]]:
+    """With prob ``follow_prob`` a request continues a live session.
+
+    ``session_pool`` bounds the working set of live sessions (the
+    population a follow-up draws from); the default 64 preserves the
+    historical uniform stream bit-for-bit.
+    """
     # Stays scalar: rng.choice draws a data-dependent number of random
     # words (rejection sampling over the live-list length), so the
     # uniform stream cannot be pre-split; bound methods keep it cheap.
@@ -194,7 +202,7 @@ def _attach_sessions(rng: random.Random, n: int,
         else:
             append(next_sid)
             live.append(next_sid)
-            if len(live) > 64:          # bounded working set of sessions
+            if len(live) > session_pool:    # bounded working set
                 live.pop(0)
             next_sid += 1
     return sessions
@@ -202,10 +210,12 @@ def _attach_sessions(rng: random.Random, n: int,
 
 def _finish(arrivals: List[float], seed: int,
             mix: Sequence[RequestClass],
-            session_follow: float) -> List[WorkloadRequest]:
+            session_follow: float,
+            session_pool: int = 64) -> List[WorkloadRequest]:
     rng = random.Random(f"{seed}:lengths")
     sessions = _attach_sessions(random.Random(f"{seed}:sessions"),
-                                len(arrivals), session_follow)
+                                len(arrivals), session_follow,
+                                session_pool)
     prompts, outputs = _sample_lengths_block(rng, len(arrivals), mix)
     return [WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
                             output_tokens=o, session=s)
@@ -216,17 +226,19 @@ def _finish(arrivals: List[float], seed: int,
 # --------------------------------------------------------------------- #
 def poisson_trace(rate: float, num_requests: int, seed: int = 0,
                   mix: Sequence[RequestClass] = DEFAULT_MIX,
-                  session_follow: float = 0.3) -> List[WorkloadRequest]:
+                  session_follow: float = 0.3,
+                  session_pool: int = 64) -> List[WorkloadRequest]:
     u = _UniformStream(random.Random(f"{seed}:poisson")).take(num_requests)
     arrivals = np.cumsum(_exp_gaps(u, rate)).tolist()
-    return _finish(arrivals, seed, mix, session_follow)
+    return _finish(arrivals, seed, mix, session_follow, session_pool)
 
 
 def bursty_trace(rate: float, num_requests: int, seed: int = 0,
                  burst_factor: float = 6.0, on_fraction: float = 0.1,
                  period: float = 0.0,
                  mix: Sequence[RequestClass] = DEFAULT_MIX,
-                 session_follow: float = 0.3) -> List[WorkloadRequest]:
+                 session_follow: float = 0.3,
+                 session_pool: int = 64) -> List[WorkloadRequest]:
     """2-state MMPP with the same long-run rate as ``poisson_trace``.
 
     ON state: ``burst_factor * rate``; OFF state: the remainder so the
@@ -273,13 +285,14 @@ def bursty_trace(rate: float, num_requests: int, seed: int = 0,
             continue
         t += dt
         arrivals.append(t)
-    return _finish(arrivals, seed, mix, session_follow)
+    return _finish(arrivals, seed, mix, session_follow, session_pool)
 
 
 def diurnal_trace(rate: float, num_requests: int, seed: int = 0,
                   period: float = 0.0, amplitude: float = 0.8,
                   mix: Sequence[RequestClass] = DEFAULT_MIX,
-                  session_follow: float = 0.3) -> List[WorkloadRequest]:
+                  session_follow: float = 0.3,
+                  session_pool: int = 64) -> List[WorkloadRequest]:
     """Rate ``rate * (1 + amplitude*sin(2 pi t / period))`` by thinning."""
     assert 0.0 <= amplitude < 1.0
     stream = _UniformStream(random.Random(f"{seed}:diurnal"))
@@ -299,13 +312,60 @@ def diurnal_trace(rate: float, num_requests: int, seed: int = 0,
         arrivals.extend(ts[u[1::2] < lam / peak].tolist())
         t_prev = float(ts[-1])
     del arrivals[num_requests:]
-    return _finish(arrivals, seed, mix, session_follow)
+    return _finish(arrivals, seed, mix, session_follow, session_pool)
+
+
+def chat_trace(rate: float, num_requests: int, seed: int = 0,
+               turns_mean: float = 4.0, think_mean: float = 2.0,
+               first_prompt_mean: int = 192, new_tokens_mean: int = 96,
+               output_mean: int = 96,
+               max_context: int = 4096) -> List[WorkloadRequest]:
+    """Chat-heavy multi-turn trace: every request belongs to a session.
+
+    Sessions open as a Poisson process at ``rate / turns_mean``
+    sessions/s (so the long-run REQUEST rate is ~``rate``); each runs
+    a geometric number of turns (mean ``turns_mean``) separated by
+    exponential think gaps.  Turn ``k``'s prompt is the accumulated
+    conversation — ``prompt_{k-1} + output_{k-1} + new tokens`` — which
+    is precisely the shape paged KV with session residency exploits: a
+    follow-up landing on its resident group re-prefills only the NEW
+    tokens, so decode-session affinity shows a measured win instead of
+    a modeling assumption.  Deterministic in ``seed``.
+    """
+    assert turns_mean >= 1.0 and think_mean > 0.0
+    rng = random.Random(f"{seed}:chat")
+    stop = 1.0 / turns_mean             # geometric stop probability
+    sess_rate = rate / turns_mean
+    rows: List[Tuple[float, int, int, int]] = []
+    t0, sid = 0.0, 0
+    while len(rows) < num_requests:
+        t0 += rng.expovariate(sess_rate)
+        t, ctx = t0, 0
+        while True:
+            new = 1 + int(rng.expovariate(
+                1.0 / (first_prompt_mean if ctx == 0
+                       else new_tokens_mean)))
+            out = 1 + int(rng.expovariate(1.0 / output_mean))
+            out = min(out, _MAX_OUTPUT)
+            prompt = min(ctx + new, max_context, _MAX_PROMPT)
+            rows.append((t, prompt, out, sid))
+            ctx = min(prompt + out, max_context)
+            if rng.random() < stop or len(rows) >= 2 * num_requests:
+                break
+            t += rng.expovariate(1.0 / think_mean)
+        sid += 1
+    rows.sort(key=lambda r: (r[0], r[3]))
+    del rows[num_requests:]
+    return [WorkloadRequest(rid=i, arrival=t, prompt_tokens=p,
+                            output_tokens=o, session=s)
+            for i, (t, p, o, s) in enumerate(rows)]
 
 
 TRACE_KINDS = {
     "poisson": poisson_trace,
     "bursty": bursty_trace,
     "diurnal": diurnal_trace,
+    "chat": chat_trace,
 }
 
 

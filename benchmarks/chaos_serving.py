@@ -1,0 +1,236 @@
+"""Chaos day: typed fault plans vs checkpoint recovery, DES + live.
+
+  PYTHONPATH=src python benchmarks/chaos_serving.py [--quick] \
+      [--out BENCH_chaos.json] [--check]
+
+Three measured claims:
+
+**Chaos day (DES).**  A seeded ``FaultPlan`` — a full-outage blip
+(every group crashes mid-trace and recovers), plus a straggle window
+on one group — replays against the same Poisson trace twice: *naive*
+(faults only: crash victims are dropped and re-arrivals shed while
+groups are down) and *recovery* (checkpoint store + health-aware
+routing: victims park, restore from their last checkpoint on an "up",
+and replay only the lost suffix).  ``--check`` gates: recovery drops
+ZERO accepted sessions and strictly beats naive on goodput
+(completions).
+
+**Flaky fabric (DES, pd).**  Seeded per-chunk KV-transfer failures on
+every directed group pair.  A benign fault rate is absorbed by
+exponential-backoff retransmits (retries charge fabric time, nothing
+lost); a hostile link (retry budget exhausted, deadline blown) aborts
+the handoff and the request re-prefills on the decode group instead of
+being dropped.  ``--check`` gates: hostile refills > 0 with
+dropped == 0.
+
+**Crash recovery (live engines).**  A two-engine colocated pool runs
+real greedy decode; one engine crashes mid-decode and recovers.  With
+a ``CheckpointStore`` every victim restores on the survivor and the
+final tokens are bit-identical to the fault-free run.  ``--check``
+gates: lost == recovered > 0 and bit-identity holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import numpy as np
+
+from common import (Row, bench_parser, maybe_profile, print_rows,
+                    request_graph, write_bench_json)
+import repro.configs as configs
+from repro.models import model as M
+from repro.serving.engine import Request
+from repro.serving.faults import FaultPlan, GroupHealth, RecoveryConfig
+from repro.serving.spec import DeploymentSpec
+from repro.serving.workload import poisson_trace
+
+ARCH = "llama3_8b"
+GROUPS = [["h100", "rtxpro6000"], ["a100", "l40s"], ["a100", "l40s"]]
+LOAD_X = 1.5            # offered load, multiples of annealed capacity
+
+
+def _graph():
+    return request_graph(ARCH, prompt=512, n_out=64, layers=2)
+
+
+def _trace(dep, n, seed=7):
+    return poisson_trace(rate=LOAD_X * dep.cluster().capacity,
+                         num_requests=n, seed=seed)
+
+
+def chaos_day_part(rows: List[Row], results: dict, quick: bool) -> None:
+    dep = DeploymentSpec(groups=GROUPS,
+                         anneal_iters=150 if quick else 500
+                         ).compile(_graph())
+    n = 250 if quick else 800
+    trace = _trace(dep, n)
+    mid = trace[n // 2].arrival
+    plan = FaultPlan(seed=1)
+    for g in range(len(GROUPS)):        # full-outage blip
+        plan.crash(mid, group=g, recover_at=mid + 0.01)
+    plan.straggle(mid * 0.2, mid * 0.6, group=0, factor=4.0)
+
+    runs = {}
+    for tag, kw in (
+            ("naive", {}),
+            # checkpoint interval well under this toy-scale DES's
+            # sub-millisecond decode times, so victims have progress
+            ("recovery", dict(recovery=RecoveryConfig(interval=1e-5),
+                              health=GroupHealth()))):
+        t0 = time.perf_counter()
+        res = dep.simulate(trace, faults=plan, **kw)
+        dt = time.perf_counter() - t0
+        runs[tag] = res
+        rows.append((f"chaos_day_{tag}", dt * 1e6,
+                     f"completed={res.completed}/{n} "
+                     f"dropped={res.dropped} shed={res.shed} "
+                     f"recovered={res.recovered}"))
+        results[f"chaos_{tag}"] = {
+            "requests": n, "completed": res.completed,
+            "dropped": res.dropped, "shed": res.shed,
+            "recovered": res.recovered, "makespan": res.makespan,
+        }
+    results["chaos_goodput_gain"] = (runs["recovery"].completed
+                                     - runs["naive"].completed)
+
+
+def flaky_part(rows: List[Row], results: dict, quick: bool) -> None:
+    dep = DeploymentSpec(groups=GROUPS, router="pd_split", pd=True,
+                         kv_chunks=4,
+                         anneal_iters=150 if quick else 500
+                         ).compile(_graph())
+    n = 250 if quick else 800
+    trace = _trace(dep, n)
+
+    def all_links(seed, **kw):
+        plan = FaultPlan(seed=seed)
+        for s in range(len(GROUPS)):
+            for d in range(len(GROUPS)):
+                if s != d:
+                    plan.flaky_link(s, d, **kw)
+        return plan
+
+    for tag, plan in (
+            ("benign", all_links(5, p=0.05, max_retries=8,
+                                 deadline=10.0)),
+            ("hostile", all_links(5, p=0.9, max_retries=1,
+                                  deadline=1e-6))):
+        t0 = time.perf_counter()
+        res = dep.simulate(trace, faults=plan)
+        dt = time.perf_counter() - t0
+        rows.append((f"flaky_{tag}", dt * 1e6,
+                     f"retries={res.kv_retries} "
+                     f"refills={res.kv_refills} dropped={res.dropped}"))
+        results[f"flaky_{tag}"] = {
+            "requests": n, "kv_retries": res.kv_retries,
+            "kv_refills": res.kv_refills, "dropped": res.dropped,
+            "completed": res.completed, "shed": res.shed,
+        }
+
+
+def live_part(rows: List[Row], results: dict) -> None:
+    cfg = dataclasses.replace(configs.get_smoke(ARCH), dtype="float32")
+    params = M.init_params(cfg)
+    spec = DeploymentSpec(groups=[["h100"], ["a100"]], arch=ARCH,
+                          engine={"slots": 4, "max_len": 64})
+    rng = np.random.default_rng(0)
+
+    def reqs():
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=s).astype(np.int32),
+                        max_new_tokens=12, arrival=0.0)
+                for i, s in enumerate((12, 9, 17))]
+
+    rng = np.random.default_rng(0)
+    ref = reqs()
+    t0 = time.perf_counter()
+    spec.compile().launch(cfg, params).run(ref)
+    t_ref = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    chaos = reqs()
+    dep = spec.compile().launch(cfg, params)
+    dep.inject(FaultPlan(seed=4).crash(0.25, group=0, recover_at=0.6),
+               recovery=RecoveryConfig(interval=0.02,
+                                       min_dirty_tokens=1))
+    t0 = time.perf_counter()
+    stats = dep.run(chaos)
+    t_chaos = time.perf_counter() - t0
+
+    ident = all(a.output == b.output for a, b in zip(ref, chaos))
+    rows.append(("live_fault_free", t_ref * 1e6,
+                 f"sessions={len(ref)}"))
+    rows.append(("live_crash_recovery", t_chaos * 1e6,
+                 f"lost={stats['lost_sessions']} "
+                 f"recovered={stats['recovered_sessions']} "
+                 f"bit_identical={ident}"))
+    results["live"] = {
+        "sessions": len(ref),
+        "lost": stats["lost_sessions"],
+        "recovered": stats["recovered_sessions"],
+        "checkpoints": stats["checkpoints"],
+        "bit_identical": ident,
+        "fault_free_s": t_ref, "chaos_s": t_chaos,
+    }
+
+
+def main() -> int:
+    ap = bench_parser(
+        description=__doc__.split("\n")[0],
+        check_help="gate: recovery drops zero accepted sessions and "
+                   "beats naive chaos-day goodput; hostile flaky links "
+                   "refill instead of drop; live crash victims all "
+                   "recover bit-identically")
+    args = ap.parse_args()
+    rows: List[Row] = []
+    results: dict = {}
+    with maybe_profile(args.profile):
+        chaos_day_part(rows, results, args.quick)
+        flaky_part(rows, results, args.quick)
+        live_part(rows, results)
+    print_rows(rows)
+    write_bench_json(args.out, results)
+    if args.check:
+        rec, nai = results["chaos_recovery"], results["chaos_naive"]
+        if rec["dropped"] != 0:
+            print(f"CHECK FAILED: recovery dropped "
+                  f"{rec['dropped']} accepted sessions",
+                  file=sys.stderr)
+            return 1
+        if rec["completed"] <= nai["completed"]:
+            print(f"CHECK FAILED: recovery goodput {rec['completed']} "
+                  f"does not beat naive {nai['completed']}",
+                  file=sys.stderr)
+            return 1
+        host = results["flaky_hostile"]
+        if host["dropped"] != 0 or host["kv_refills"] <= 0:
+            print(f"CHECK FAILED: hostile flaky links must refill "
+                  f"(got {host['kv_refills']}) and never drop "
+                  f"(got {host['dropped']})", file=sys.stderr)
+            return 1
+        live = results["live"]
+        if not (live["lost"] > 0
+                and live["recovered"] == live["lost"]
+                and live["bit_identical"]):
+            print(f"CHECK FAILED: live crash recovery "
+                  f"lost={live['lost']} recovered={live['recovered']} "
+                  f"bit_identical={live['bit_identical']}",
+                  file=sys.stderr)
+            return 1
+        print(f"CHECK OK: chaos-day goodput {rec['completed']} vs "
+              f"naive {nai['completed']} with 0 dropped; hostile "
+              f"links refilled {host['kv_refills']}; live recovered "
+              f"{live['recovered']}/{live['lost']} bit-identically",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -312,6 +312,8 @@ class ClusterRequest:
     kv_bytes: float = 0.0           # prefill->decode KV handoff size
     slo: Optional[float] = None     # completion deadline (s of latency)
     slo_ttft: Optional[float] = None    # first-token deadline (s)
+    priority: int = 0               # brown-out shedding order (higher
+    #                                 survives longer; see router health)
 
 
 def _phase_scales(req: ClusterRequest, phase: str) -> Tuple[float, float]:
@@ -629,6 +631,12 @@ class ReplicaModel:
         # all mask the group by flipping this; routers skip ineligible
         # groups (see serving/router.py).
         self.eligible = True
+        # Transient straggle multiplier owned by "slow" control events:
+        # every stage unit (and the service predictions routers probe)
+        # runs `slow` x longer while a window is open.  Exactly 1.0
+        # outside windows; the walks guard on `!= 1.0` so fault-free
+        # runs evaluate the identical float expressions.
+        self.slow = 1.0
         self.dev_free = [0.0] * num_devices
         self.link_free = [0.0] * num_devices
         self.dev_busy = [0.0] * num_devices
@@ -642,12 +650,14 @@ class ReplicaModel:
     def predicted_service(self, req: ClusterRequest,
                           policy: Optional[str] = None) -> float:
         """Unqueued execution latency of ``req`` on this replica."""
+        sp, so = req.scale_prompt, req.scale_output
+        if self.slow != 1.0:
+            sp *= self.slow
+            so *= self.slow
         if self.reference:
             units = self.unit_sets[policy or self.policy]
-            return sum(u.scaled(req.scale_prompt, req.scale_output)
-                       for u in units)
-        return self.programs[policy or self.policy].service(
-            req.scale_prompt, req.scale_output)
+            return sum(u.scaled(sp, so) for u in units)
+        return self.programs[policy or self.policy].service(sp, so)
 
     def backlog(self, now: float) -> float:
         """Seconds until the most-loaded resource drains (queue delay
@@ -676,6 +686,9 @@ class ReplicaModel:
         ``scale_prompt=0``, so prefill + decode == the colocated total.
         """
         sp, so = _phase_scales(req, phase)
+        if self.slow != 1.0:
+            sp *= self.slow
+            so *= self.slow
         if self.reference:
             units = self.unit_sets[policy or self.policy]
             return sum(u.scaled(sp, so) for u in units)
@@ -723,6 +736,9 @@ class ReplicaModel:
         the same IEEE float64 expression the reference walk evaluates
         per unit (the parity suite asserts equal event logs)."""
         sp, so = _phase_scales(req, phase)
+        if self.slow != 1.0:        # open straggle window
+            sp *= self.slow
+            so *= self.slow
         prog = self.programs[self.policy]
         if prog.n >= _VECTOR_WALK_MIN:
             wp = prog.walk_plan(phase)
@@ -876,6 +892,9 @@ class ReplicaModel:
         path must reproduce bit-identically, and as the honest
         "before" of benchmarks/des_throughput.py."""
         sp, so = _phase_scales(req, phase)
+        if self.slow != 1.0:        # open straggle window
+            sp *= self.slow
+            so *= self.slow
         t = max(req.arrival, not_before)
         prefill_end = t
         start_t: Optional[float] = None
@@ -949,6 +968,13 @@ class ClusterResult:
     #                                     a failed group (recovered)
     dropped: int = 0                    # accepted requests lost because
     #                                     no eligible group remained
+    # fault-injection extras (zero without a ``faults=`` plan)
+    kv_retries: int = 0                 # failed KV chunk transfers that
+    #                                     were retried with backoff
+    kv_refills: int = 0                 # aborted handoffs re-prefilled
+    #                                     on the decode group
+    recovered: int = 0                  # crash victims restored from a
+    #                                     checkpoint (vs replayed fresh)
     # events="agg" replaces the tuple log with this reduction (None in
     # "full" mode; both None under events=None)
     event_agg: Optional[EventAggregate] = None
@@ -1079,6 +1105,72 @@ def _stream_kv(ic: Interconnect, nbytes: float, src: int, dst: int,
     return serial
 
 
+def _stream_kv_flaky(ic: Interconnect, nbytes: float, src: int, dst: int,
+                     pre_start: float, pre_fin: float, chunks: int, link
+                     ) -> Tuple[Optional[float],
+                                List[Tuple[float, float]], float, int]:
+    """Fault-injected variant of :func:`_stream_kv`.
+
+    ``link`` (see serving/faults.FaultState.link) carries the per-link
+    failure probability ``p``, a seeded ``rng``, and the retry policy
+    (``max_retries``, ``backoff``, ``deadline``).  Each chunk transfer
+    fails independently with probability ``p``; a failed attempt still
+    occupies the fabric for the full chunk time (the bytes moved, the
+    checksum did not) and is retried after exponential backoff.  When
+    a chunk exhausts its retries, or a retry would start past the
+    transfer deadline (``pre_fin + deadline``), the handoff ABORTS:
+    ``kv_at`` comes back ``None`` and the caller re-prefills on the
+    decode group.  Returns ``(kv_at, events, busy_seconds, retries)``.
+
+    With zero failure draws the schedule — including the never-later
+    serial fallback — is bit-identical to :func:`_stream_kv`, and a
+    fault-free transfer never aborts regardless of the deadline.
+    """
+    if nbytes <= 0.0 or src == dst:
+        kv_at, evs, busy = _stream_kv(ic, nbytes, src, dst, pre_start,
+                                      pre_fin, chunks)
+        return kv_at, evs, busy, 0
+    span = pre_fin - pre_start
+    streamed = chunks > 1 and span > 0.0
+    n = chunks if streamed else 1
+    if streamed:
+        per = ic.base_latency + (nbytes / n) / ic.bandwidth(src, dst)
+    else:
+        per = ic.transfer_time(nbytes, src, dst)
+    deadline = pre_fin + link.deadline
+    rng = link.rng
+    done = pre_start if streamed else pre_fin
+    evs: List[Tuple[float, float]] = []
+    busy = 0.0
+    retries = 0
+    failed_any = False
+    for c in range(1, n + 1):
+        ready = pre_start + span * c / n if streamed else pre_fin
+        s = max(ready, done)
+        attempt = 0
+        while True:
+            if failed_any and s + per > deadline:
+                return None, evs, busy, retries
+            end = s + per
+            evs.append((s, end))
+            busy += per
+            if rng.random() >= link.p:
+                done = end
+                break
+            failed_any = True
+            retries += 1
+            attempt += 1
+            if attempt > link.max_retries:
+                return None, evs, busy, retries
+            s = end + link.backoff * (2.0 ** (attempt - 1))
+    if not failed_any and streamed:
+        serial_dur = ic.transfer_time(nbytes, src, dst)
+        if done > pre_fin + serial_dur:
+            return (pre_fin + serial_dur,
+                    [(pre_fin, pre_fin + serial_dur)], serial_dur, 0)
+    return done, evs, busy, retries
+
+
 def simulate_cluster_pd(replicas: Sequence[ReplicaModel],
                         trace: Sequence[ClusterRequest],
                         route_fn,
@@ -1122,21 +1214,89 @@ class ControlEvent:
         sending new requests there, resident work finishes normally,
       * ``"fail"`` — hard kill at ``time``: masked like "down", AND
         every in-flight request whose completion still depends on the
-        group is re-routed across the survivors from ``time``.
+        group is re-routed across the survivors from ``time``,
+      * ``"slow"`` — transient straggle: from ``time`` the group's
+        stage units (and its service predictions, so routers observe
+        the slowdown) are inflated by ``factor``; a later "slow" with
+        ``factor=1.0`` ends the window.  Does not touch eligibility.
+
+    An "up" whose group has an earlier "fail"/"down" in the SAME static
+    timeline is a RECOVERY (crash-and-return): the group starts
+    eligible and comes back at ``time``.  Only a group whose FIRST
+    event is "up" starts masked (warm-up pending) — see
+    :func:`validate_timeline`.
     """
     time: float
-    kind: str                   # "up" | "down" | "fail"
+    kind: str                   # "up" | "down" | "fail" | "slow"
     group: int
+    factor: float = 1.0         # service-time multiplier ("slow" only)
 
     def __post_init__(self):
-        if self.kind not in ("up", "down", "fail"):
+        if self.kind not in ("up", "down", "fail", "slow"):
             raise ValueError(f"unknown control-event kind {self.kind!r}")
+        if self.factor <= 0.0:
+            raise ValueError(f"control-event factor must be > 0, "
+                             f"got {self.factor!r}")
 
 
 #: fail/down before up at the same instant: a group swapped in exactly
 #: when another dies must not absorb the dead group's in-flight work
-#: before its own warm-up event has fired.
-_EVENT_ORDER = {"fail": 0, "down": 1, "up": 2}
+#: before its own warm-up event has fired.  "slow" applies after any
+#: eligibility flip at the same instant.
+_EVENT_ORDER = {"fail": 0, "down": 1, "up": 2, "slow": 3}
+
+
+def validate_timeline(events: Sequence[ControlEvent], n_groups: int,
+                      start_ineligible: Sequence[int] = ()) -> set:
+    """Validate a STATIC control timeline; returns the groups that
+    must start masked.
+
+    Rejects contradictory timelines instead of silently replaying
+    them: a "fail"/"down" for a group that is already down (duplicate
+    fails, fail-after-down) and an "up" for a group that is already
+    eligible both raise ``ValueError``.  A group whose FIRST
+    eligibility event is "up" is warming up and starts masked; an "up"
+    that FOLLOWS a "fail"/"down" is a recovery and must not mask the
+    group from t=0 (the historical setup loop masked on ANY "up",
+    which made crash-and-return timelines serve nothing before the
+    crash).  "slow" events only have their group index checked.
+
+    Controller-injected runtime events are not validated here — the
+    controller reacts to live state the static timeline cannot see.
+    """
+    ordered = sorted(events, key=lambda e: (e.time, _EVENT_ORDER[e.kind],
+                                            e.group))
+    reserve = {int(g) for g in start_ineligible}
+    state: Dict[int, bool] = {}
+    start_masked: set = set()
+    for e in ordered:
+        if e.group < 0 or e.group >= n_groups:
+            raise ValueError(f"control event {e} names group {e.group}; "
+                             f"deployment has {n_groups}")
+        if e.kind == "slow":
+            continue
+        if e.group not in state:
+            if e.kind == "up" and e.group not in reserve:
+                start_masked.add(e.group)
+                state[e.group] = False
+            else:
+                # reserve groups already start masked; their
+                # activation "up" needs no extra warm-up masking
+                state[e.group] = e.group not in reserve
+        if e.kind == "up":
+            if state[e.group]:
+                raise ValueError(
+                    f"contradictory timeline: 'up' at t={e.time:g} for "
+                    f"group {e.group}, which is already eligible")
+            state[e.group] = True
+        else:
+            if not state[e.group]:
+                raise ValueError(
+                    f"contradictory timeline: {e.kind!r} at "
+                    f"t={e.time:g} for group {e.group}, which is "
+                    f"already down")
+            state[e.group] = False
+    return start_masked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1346,8 +1506,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                         controller=None,
                         start_ineligible: Sequence[int] = (),
                         events: Optional[str] = "full",
-                        kv: Optional[KvPoolModel] = None
-                        ) -> ClusterResult:
+                        kv: Optional[KvPoolModel] = None,
+                        faults=None) -> ClusterResult:
     """One DES entry point behind every serving surface.
 
     Subsumes :func:`simulate_cluster` (colocated routing) and
@@ -1395,8 +1555,23 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     requests), ``None`` records nothing.  The schedule itself is
     identical in every mode — recording is strictly observational.
 
+    ``faults`` is a BOUND fault state (``serving.faults.FaultPlan
+    .bind()``; crash/straggle events arrive via ``timeline``).  Three
+    hooks, each strictly opt-in so ``faults=None`` runs stay
+    bit-identical: per-link flaky KV transfers route through
+    :func:`_stream_kv_flaky` (seeded retries, abort → re-prefill on
+    the decode group, counted in ``kv_retries``/``kv_refills``);
+    ``faults.recovery`` replays crash victims from their last periodic
+    checkpoint (decode work before the checkpoint is NOT re-run, a
+    host-restore delay is charged, and a victim with no eligible group
+    is PARKED in the host store and replayed at the next "up" instead
+    of dropping — still-parked requests at end of trace count as
+    ``dropped``); ``faults.health`` observes transfer errors and
+    eligibility flips (circuit breakers for health-aware routers).
+
     Deterministic: identical (trace, plans, router, timeline,
-    controller config) produce a bit-identical event log.
+    controller config, fault plan seed) produce a bit-identical event
+    log.
     """
     if events not in ("full", "agg", None):
         raise ValueError(f"events must be 'full', 'agg' or None, "
@@ -1417,11 +1592,16 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                               eseq, e))
         eseq += 1
 
+    # Contradictory static timelines are rejected up front; only
+    # groups whose FIRST event is "up" (warm-up pending) start masked,
+    # so crash-and-recover timelines serve normally before the crash.
+    start_masked = validate_timeline(timeline, len(replicas),
+                                     start_ineligible)
     for e in sorted(timeline,
                     key=lambda e: (e.time, _EVENT_ORDER[e.kind], e.group)):
         push_event(e)
-        if e.kind == "up":          # warm-up pending: starts masked
-            replicas[e.group].eligible = False
+    for g in start_masked:
+        replicas[g].eligible = False
     for g in start_ineligible:
         replicas[int(g)].eligible = False
     # Per-request mutable record, indexed by trace position.  "served"
@@ -1438,7 +1618,14 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         rep.track_inflight = track
     kv_resident: List[Tuple[float, float, float]] = []
     counters = {"shed": 0, "dropped": 0, "rerouted": 0,
-                "transfers": 0, "transfer_seconds": 0.0}
+                "transfers": 0, "transfer_seconds": 0.0,
+                "kv_retries": 0, "kv_refills": 0, "recovered": 0}
+    fstate = faults
+    recovery = getattr(fstate, "recovery", None)
+    health = getattr(fstate, "health", None)
+    # (trace index, request to replay, ttft to preserve) of crash
+    # victims waiting in the host-side checkpoint store for capacity
+    parked: List[Tuple[int, ClusterRequest, Optional[float]]] = []
     avoided0 = int(getattr(route_fn, "transfers_avoided", 0))
     kvm = kv.bind(len(replicas)) if kv is not None else None
     # routers that look can see each group's block pressure; the
@@ -1496,9 +1683,22 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             pre_fin, _, pre_start = pre._run_units(req, ev_log,
                                                    "prefill", admit_at,
                                                    agg)
-            kv_at, xfer_evs, busy = _stream_kv(
-                ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
-                kv_chunks)
+            link = fstate.link(p_idx, d_idx) if fstate is not None \
+                else None
+            if link is None:
+                kv_at, xfer_evs, busy = _stream_kv(
+                    ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
+                    kv_chunks)
+            else:
+                kv_at, xfer_evs, busy, nretry = _stream_kv_flaky(
+                    ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
+                    kv_chunks, link)
+                counters["kv_retries"] += nretry
+                if health is not None:
+                    for _ in range(nretry):
+                        health.record_error(p_idx, pre_fin)
+                    if kv_at is not None:
+                        health.record_ok(p_idx, pre_fin)
             for (x0, x1) in xfer_evs:
                 if ev_log is not None:
                     ev_log.append((d_idx, req.rid, KV_TRANSFER, p_idx,
@@ -1507,6 +1707,26 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                     agg.add(d_idx, KV_TRANSFER, p_idx, x0, x1)
             counters["transfers"] += 1
             counters["transfer_seconds"] += busy
+            if kv_at is None:
+                # handoff aborted (retries exhausted / deadline blown):
+                # the decode group re-prefills locally from the prompt.
+                # The prefill group's work and the attempted transfers
+                # are wasted, nothing became resident in flight, and a
+                # later prefill-group death cannot hurt this request.
+                counters["kv_refills"] += 1
+                t_abort = xfer_evs[-1][1] if xfer_evs else pre_fin
+                finish, first_tok, _ = dec._run_units(req, ev_log,
+                                                      "both", t_abort,
+                                                      agg)
+                ttft_abs = first_tok
+                if kvm is not None:
+                    kvm.release(d_idx, req, finish)
+                records[i] = {"served": True, "p": p_idx, "d": d_idx,
+                              "finish": finish, "kv_at": None,
+                              "kv_i": None, "d0": first_tok,
+                              "lat": finish - arrival0,
+                              "ttft": ttft_abs - arrival0}
+                return
             finish, _, _ = dec._run_units(req, ev_log, "decode", kv_at,
                                           agg)
             # first token streams from the decode group once the state
@@ -1537,19 +1757,53 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         records[i] = {"served": True, "p": p_idx, "d": d_idx,
                       "finish": finish, "kv_at": kv_at,
                       "kv_i": kv_i,
+                      # decode-start anchor checkpoint recovery
+                      # measures replay progress from
+                      "d0": ttft_abs if kv_at is None else kv_at,
                       "lat": finish - arrival0,
                       "ttft": ttft_abs - arrival0}
+
+    def redispatch(i: int, req: ClusterRequest, arrival0: float,
+                   keep_ttft: Optional[float]) -> None:
+        """Re-submit a crash victim.  With recovery enabled a victim
+        the router cannot place is PARKED (its checkpoint lives in the
+        host store) and replayed at the next "up" event instead of
+        dropping; ``keep_ttft`` preserves the client-visible TTFT of a
+        checkpoint-restored session (its first token streamed long
+        ago)."""
+        dispatch(i, req, req.arrival, arrival0, fresh=False)
+        rec = records[i]
+        if not rec["served"]:
+            if recovery is not None:
+                counters["dropped"] -= 1
+                parked.append((i, req, keep_ttft))
+            return
+        if keep_ttft is not None:
+            rec["ttft"] = keep_ttft
 
     def apply_events(upto: float) -> None:
         while pend and pend[0][0] <= upto:
             e = heapq.heappop(pend)[-1]
             rep = replicas[e.group]
+            if e.kind == "slow":
+                rep.slow = e.factor
+                continue
             if e.kind == "up":
                 rep.eligible = True
+                if health is not None:
+                    health.reset(e.group, e.time)
+                if parked:
+                    waiting, parked[:] = list(parked), []
+                    for (i, preq, keep_ttft) in waiting:
+                        redispatch(i, dataclasses.replace(
+                            preq, arrival=e.time),
+                            trace[i].arrival, keep_ttft)
                 continue
             rep.eligible = False
             if e.kind != "fail":
                 continue            # graceful drain: residents finish
+            if health is not None:
+                health.trip(e.group, e.time)
             if kvm is not None:
                 kvm.clear(e.group)  # the block pool died with the group
             for i, rec in enumerate(records):
@@ -1575,9 +1829,36 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                     kv_resident[rec["kv_i"]] = \
                         (a0, t1, w) if a0 < t1 else (a0, a0, 0.0)
                 counters["rerouted"] += 1
-                dispatch(i, dataclasses.replace(trace[i],
-                                                arrival=e.time),
-                         e.time, trace[i].arrival, fresh=False)
+                if recovery is None:
+                    dispatch(i, dataclasses.replace(trace[i],
+                                                    arrival=e.time),
+                             e.time, trace[i].arrival, fresh=False)
+                    continue
+                # checkpoint replay-cost model: decode work up to the
+                # last periodic checkpoint (every `interval` seconds
+                # from the decode start) is NOT re-run; the survivor
+                # charges a host-restore delay and replays only the
+                # post-checkpoint suffix.  A victim that never started
+                # decoding (or died inside its first interval) has no
+                # checkpoint and replays from scratch.
+                vic = dataclasses.replace(trace[i], arrival=e.time)
+                keep_ttft = None
+                d0, d1 = rec["d0"], rec["finish"]
+                if rec["d"] == e.group and e.time > d0 and d1 > d0:
+                    k = math.floor((e.time - d0) / recovery.interval)
+                    frac = min(k * recovery.interval / (d1 - d0), 1.0)
+                    if frac > 0.0:
+                        restore = (recovery.base_latency
+                                   + trace[i].kv_bytes
+                                   / recovery.restore_bw)
+                        vic = dataclasses.replace(
+                            trace[i], arrival=e.time + restore,
+                            scale_prompt=0.0,
+                            scale_output=(trace[i].scale_output
+                                          * (1.0 - frac)))
+                        keep_ttft = rec["ttft"]
+                        counters["recovered"] += 1
+                redispatch(i, vic, trace[i].arrival, keep_ttft)
 
     # ------------------------------------------------------------- #
     # closed-loop control: every `interval` seconds of simulated time
@@ -1631,6 +1912,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             elif not _meets_slo(req, rec["lat"], rec["ttft"]):
                 ctl_counts["miss"] += 1
     apply_events(math.inf)          # events after the last arrival
+    # victims still parked when the trace ends never found capacity
+    counters["dropped"] += len(parked)
 
     latencies: List[float] = []
     ttfts: List[float] = []
@@ -1668,6 +1951,9 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         transfers_avoided=int(getattr(route_fn, "transfers_avoided", 0))
         - avoided0,
         rerouted=counters["rerouted"], dropped=counters["dropped"],
+        kv_retries=counters["kv_retries"],
+        kv_refills=counters["kv_refills"],
+        recovered=counters["recovered"],
         kv_hits=kvm.hits if kvm is not None else 0,
         kv_hit_tokens=kvm.hit_tokens if kvm is not None else 0.0,
         kv_delayed=kvm.delayed if kvm is not None else 0,

@@ -1,12 +1,21 @@
 """Fault-tolerant runtime glue: failure detection, elastic re-planning,
 straggler deadlines.
 
-Tessera-native elasticity (DESIGN.md §6): because the unit of placement
-is a *kernel*, losing a device never requires re-architecting the
-parallelism — the planner simply re-solves placement over the surviving
-device set (``replan_on_failure``), pinned state is re-homed, and the
-executor is rebuilt.  This is strictly more flexible than phase/block
-disaggregation, whose recovery unit is an entire phase pool.
+Tessera-native elasticity: because the unit of placement is a
+*kernel*, losing a device never requires re-architecting the
+parallelism — the planner simply re-solves placement over the
+surviving device set (``replan_on_failure``), pinned state is
+re-homed, and the executor is rebuilt.  This is strictly more flexible
+than phase/block disaggregation, whose recovery unit is an entire
+phase pool.
+
+Health primitives live in :mod:`repro.serving.faults` (the
+fault-tolerance layer serving both the DES and the live engines);
+``DeviceHealth`` is re-exported here for compatibility — it keeps its
+historical ``alive``/``fail``/``lost`` surface but now latches a
+per-device circuit breaker (``serving.faults.GroupHealth``) on
+failure, so runtime device loss and serving-layer health speak the
+same language.
 """
 from __future__ import annotations
 
@@ -20,18 +29,9 @@ from repro.core import planner as planner_lib
 from repro.core.analyzer import TracedGraph
 from repro.core.executor import StagedExecutable, build_executable
 from repro.core.planner import Plan
+from repro.serving.faults import DeviceHealth
 
-
-@dataclasses.dataclass
-class DeviceHealth:
-    """Heartbeat-style health registry (simulated failures in tests)."""
-    alive: List[bool]
-
-    def fail(self, idx: int) -> None:
-        self.alive[idx] = False
-
-    def lost(self) -> Set[int]:
-        return {i for i, a in enumerate(self.alive) if not a}
+__all__ = ["DeviceHealth", "ElasticExecutor"]
 
 
 class ElasticExecutor:

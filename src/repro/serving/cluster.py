@@ -199,7 +199,8 @@ class TesseraCluster:
             scale_output=req.output_tokens / self.base_output,
             session=req.session,
             kv_bytes=self.kv_bytes(req.prompt_tokens),
-            slo=req.slo, slo_ttft=req.slo_ttft)
+            slo=req.slo, slo_ttft=req.slo_ttft,
+            priority=getattr(req, "priority", 0))
 
     def build_replicas(self) -> List[ReplicaModel]:
         """Fresh mutable replica state (queues, monitors, policies)."""

@@ -30,6 +30,7 @@ Two pieces, one file:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
@@ -40,7 +41,25 @@ from repro.models import model as M
 from repro.models import layers as LY
 
 __all__ = ["KvSlice", "SessionState", "BlockPool", "PagedKvCache",
-           "SessionManager"]
+           "SessionManager", "ShardChecksumError", "kv_checksum"]
+
+
+class ShardChecksumError(RuntimeError):
+    """A streamed shard arrived corrupted (its ``checksum`` does not
+    match its state bytes).  :meth:`SessionManager.receive` raises this
+    AFTER rolling the reserved slot/blocks back, so the caller can fall
+    back to re-prefilling on the receiving engine."""
+
+
+def kv_checksum(state: Any) -> int:
+    """crc32 over the raw bytes of every leaf of a state pytree (leaf
+    order is the pytree's canonical flatten order, so producer and
+    consumer agree)."""
+    crc = 0
+    for leaf in jax.tree_util.tree_leaves(state):
+        crc = zlib.crc32(
+            np.ascontiguousarray(jax.device_get(leaf)).tobytes(), crc)
+    return crc
 
 
 # ===================================================================== #
@@ -51,7 +70,10 @@ class KvSlice:
     """One streamed shard of a session's state: a (component, layer,
     token-range) slice of the cache pytree plus its wire size.  The
     unit yielded by :meth:`SessionManager.stream` and consumed by
-    :meth:`SessionManager.receive`."""
+    :meth:`SessionManager.receive`.  ``checksum`` (opt-in via
+    ``stream(checksum=True)``) carries the producer-side
+    :func:`kv_checksum`; :meth:`SessionManager.receive` verifies it on
+    arrival and rejects the stream on mismatch."""
     rid: int
     component: str                      # "kv" / "rwkv" / "mamba" / ...
     layer: int
@@ -59,6 +81,12 @@ class KvSlice:
     t1: Optional[int] = None
     state: Any = None                   # batch-1 layer-1 pytree
     nbytes: int = 0
+    checksum: Optional[int] = None      # producer-side kv_checksum
+
+    def verify(self) -> bool:
+        """True when no checksum travelled or it matches the state."""
+        return (self.checksum is None
+                or self.checksum == kv_checksum(self.state))
 
     def to_legacy(self) -> Dict[str, Any]:
         """The pre-facade stream-shard dict."""
@@ -412,6 +440,25 @@ class PagedKvCache:
         self.release(rid)
         return out
 
+    def peek(self, rid: int) -> Tuple[Any, int, int, int]:
+        """Reassemble a parked session's state WITHOUT releasing its
+        blocks or changing its tier — the non-destructive read the
+        periodic checkpoint store polls (see
+        :meth:`SessionManager.snapshot`)."""
+        ent = self.resident[rid]
+        assert ent.tier != "active", "active sessions export via slots"
+        if ent.tier == "host":
+            state = jax.tree_util.tree_map(jnp.asarray, ent.host)
+        elif self.token_paged and ent.payload is not None \
+                and ent.pos > 0 and "kv" not in ent.payload:
+            nb = -(-ent.pos // self.block_tokens)
+            state = dict(ent.payload)
+            state["kv"] = M.gather_kv_blocks(
+                self.arrays, ent.block_ids[:nb], ent.pos)
+        else:
+            state = ent.payload
+        return state, ent.last_tok, ent.pos, ent.budget
+
 
 # ===================================================================== #
 # SessionManager: the one session-state API
@@ -433,9 +480,12 @@ class SessionManager:
     import_session          ``restore(req, st)`` (token not pending)
     ======================  =========================================
 
-    plus ``migrate(peer)`` (checkpoint -> peer.restore, loss-free) and
+    plus ``migrate(peer)`` (checkpoint -> peer.restore, loss-free),
     ``prefetch(rid, peer)`` (pull ONE session off a peer engine — the
-    top of the HBM -> host -> peer cache hierarchy).
+    top of the HBM -> host -> peer cache hierarchy), and the
+    fault-tolerance pair ``snapshot()`` (non-destructive periodic
+    checkpoint read) / ``crash()`` (lose everything, state
+    unexported).
     """
 
     def __init__(self, engine):
@@ -494,15 +544,18 @@ class SessionManager:
             priority=getattr(req, "priority", 0))
 
     def stream(self, req, now: Optional[float] = None,
-               chunk_size: Optional[int] = None
-               ) -> Iterator[Any]:
+               chunk_size: Optional[int] = None,
+               checksum: bool = False) -> Iterator[Any]:
         """Pipelined :meth:`prefill`: yield :class:`KvSlice` shards
         the moment each (layer, chunk) is computed, then the
         :class:`SessionState` cursor as the FINAL item (its ``nbytes``
         is the total shard bytes already streamed; ``state`` is None).
         Consuming the generator drives the producer's prefill chunks,
         so a :meth:`receive` on a peer overlaps transfer with the
-        remaining prefill compute."""
+        remaining prefill compute.  ``checksum=True`` stamps each
+        shard with :func:`kv_checksum` (a host-side read per shard —
+        off by default; the chaos-injection path turns it on) so the
+        receiver can detect in-flight corruption."""
         eng = self.eng
         from repro.serving.engine import _PAD_SAFE_FAMILIES
         assert len(req.prompt) < eng.max_len, "prompt exceeds max_len"
@@ -516,7 +569,9 @@ class SessionManager:
                                       t0, t1)
             return KvSlice(rid=req.rid, component=key, layer=layer,
                            t0=t0, t1=t1, state=shard,
-                           nbytes=M.kv_state_bytes(shard))
+                           nbytes=M.kv_state_bytes(shard),
+                           checksum=(kv_checksum(shard) if checksum
+                                     else None))
 
         if (eng._prefill_custom is None
                 and eng.cfg.sliding_window is None and C < plen):
@@ -633,7 +688,10 @@ class SessionManager:
         decoding the moment the final :class:`SessionState` lands.
         TTFT is stamped at that moment.  Returns False — without
         consuming anything — when no slot (or, paged, no pool room)
-        is free."""
+        is free.  A checksummed shard that fails :meth:`KvSlice.verify`
+        raises :class:`ShardChecksumError` AFTER the reserved
+        slot/blocks are rolled back, so the caller can re-prefill
+        locally instead."""
         eng = self.eng
         assert len(req.prompt) < eng.max_len, \
             "handoff prompt exceeds this engine's max_len"
@@ -673,8 +731,14 @@ class SessionManager:
                 if isinstance(raw, SessionState):
                     header = raw
                     break
-                item = raw.to_legacy() if isinstance(raw, KvSlice) \
-                    else raw
+                if isinstance(raw, KvSlice):
+                    if not raw.verify():
+                        raise ShardChecksumError(
+                            f"rid {raw.rid}: shard {raw.component}/"
+                            f"{raw.layer} arrived corrupted")
+                    item = raw.to_legacy()
+                else:
+                    item = raw
                 if item.get("header"):
                     header = SessionState.from_legacy(item)
                     break
@@ -761,6 +825,71 @@ class SessionManager:
                     priority=getattr(preq, "priority", 0))))
         eng._recompute_remaining()
         return out
+
+    def snapshot(self, now: Optional[float] = None
+                 ) -> List[Tuple[Any, SessionState]]:
+        """Non-destructive :meth:`checkpoint`: settle the buffered
+        window and package every resident session — active slots AND
+        parked / spilled pool residents — WITHOUT freeing anything;
+        decode continues untouched.  The periodic host-side
+        ``CheckpointStore`` (serving/faults.py) polls this.  Exported
+        states are copies (``export_kv`` / :meth:`PagedKvCache.peek`
+        slice fresh arrays), so later decode steps do not mutate a
+        taken snapshot."""
+        eng = self.eng
+        eng.sync(now)
+        out: List[Tuple[Any, SessionState]] = []
+        if any(r is not None for r in eng.active):
+            pos = np.asarray(eng.pos)
+            last = np.asarray(eng.last_tok)
+            budget = np.asarray(eng.budget)
+            for slot in range(eng.slots):
+                req = eng.active[slot]
+                if req is None:
+                    continue
+                state = M.export_kv(eng.cfg, eng.cache, slot,
+                                    int(pos[slot]))
+                out.append((req, SessionState(
+                    rid=req.rid, state=state,
+                    last_tok=int(last[slot]), pos=int(pos[slot]),
+                    budget=int(budget[slot]),
+                    nbytes=M.kv_state_bytes(state), done=False,
+                    first_token_pending=False,
+                    priority=getattr(req, "priority", 0))))
+        if eng._paged is not None:
+            for rid in eng._paged.parked():
+                preq = eng._paged.resident[rid].req
+                state, lt, p, b = eng._paged.peek(rid)
+                out.append((preq, SessionState(
+                    rid=rid, state=state, last_tok=lt, pos=p,
+                    budget=b, nbytes=M.kv_state_bytes(state),
+                    done=False, first_token_pending=False,
+                    priority=getattr(preq, "priority", 0))))
+        return out
+
+    def crash(self, now: Optional[float] = None) -> List[Any]:
+        """Hard-kill this engine's resident sessions WITHOUT exporting
+        state (the fault-injection path): every active slot and every
+        pool resident is lost; slots and blocks are freed.  Returns
+        the lost requests — the caller decides which can come back
+        from a checkpoint store (see ``LaunchedDeployment.inject``)."""
+        eng = self.eng
+        eng.sync(now)
+        lost: List[Any] = []
+        for slot in range(eng.slots):
+            req = eng.active[slot]
+            if req is None:
+                continue
+            lost.append(req)
+            eng.active[slot] = None
+            eng.active_mask = eng.active_mask.at[slot].set(False)
+        if eng._paged is not None:
+            for rid in eng._paged.parked():
+                lost.append(eng._paged.resident[rid].req)
+            for rid in list(eng._paged.resident):
+                eng._paged.release(rid)
+        eng._recompute_remaining()
+        return lost
 
     def checkpoint_one(self, rid: int, now: Optional[float] = None
                        ) -> Optional[Tuple[Any, SessionState]]:

@@ -129,7 +129,9 @@ class JSEDRouter(Router):
     def __init__(self, affinity_break: float = float("inf"),
                  slo_shed: bool = False,
                  session_affinity: bool = True,
-                 kv_penalty: float = 0.0):
+                 kv_penalty: float = 0.0,
+                 health=None,
+                 brownout_priority: Optional[int] = None):
         # Migrate a session when staying costs this many more seconds
         # of backlog than the best replica; inf = never migrate.
         self.affinity_break = affinity_break
@@ -142,6 +144,15 @@ class JSEDRouter(Router):
         # felt when the DES runs a KvPoolModel (replicas then carry a
         # kv_util_fn), so 0.0 and kv-less runs stay bit-identical.
         self.kv_penalty = kv_penalty
+        # A serving.faults.GroupHealth: groups with an OPEN breaker are
+        # skipped (fail-open when every breaker is open), degraded
+        # groups pay health.penalty(i, now) seconds of score, and —
+        # while ANY breaker is not closed — requests below
+        # brownout_priority are shed first (brown-out ordering).
+        # None keeps every decision bit-identical to the pre-health
+        # router.
+        self.health = health
+        self.brownout_priority = brownout_priority
         self._session_home: Dict[int, int] = {}
 
     def score(self, req: ClusterRequest, replica: ReplicaModel,
@@ -165,6 +176,15 @@ class JSEDRouter(Router):
         cand = eligible_indices(replicas)
         if not cand:
             return -1
+        h = self.health
+        if h is not None:
+            if self.brownout_priority is not None and h.degraded(now) \
+                    and getattr(req, "priority", 0) \
+                    < self.brownout_priority:
+                return -1       # brown-out: low priority sheds first
+            ok = [i for i in cand if h.allow(i, now)]
+            if ok:              # every breaker open -> fail open
+                cand = ok
         # explicit first-minimum loop == min(cand, key=(score, i)):
         # this runs once per candidate group per request, so the
         # lambda/tuple-per-candidate overhead is the router hot path
@@ -175,6 +195,8 @@ class JSEDRouter(Router):
             kv = getattr(rep, "kv_util_fn", None)
             if kv is not None:
                 best_s += self.kv_penalty * kv(now)
+        if h is not None:
+            best_s += h.penalty(best, now)
         for i in cand[1:]:
             rep = replicas[i]
             s = rep.backlog(now) + rep.predicted_service(req)
@@ -182,11 +204,18 @@ class JSEDRouter(Router):
                 kv = getattr(rep, "kv_util_fn", None)
                 if kv is not None:
                     s += self.kv_penalty * kv(now)
+            if h is not None:
+                s += h.penalty(i, now)
             if s < best_s:
                 best, best_s = i, s
         choice = best
         if self.session_affinity and req.session is not None:
             home = self._session_home.get(req.session)
+            if home is not None and h is not None \
+                    and not h.allow(home, now):
+                # the home group's breaker is open: treat it like a
+                # masked group — re-home on whatever JSED picks
+                home = None
             if home is not None and not getattr(replicas[home],
                                                 "eligible", True):
                 # the home group drained or died; its resident state is
@@ -258,9 +287,16 @@ class PDRouter(Router):
                  session_affinity: bool = False,
                  affinity_break: float = float("inf"),
                  interconnect=None,
-                 kv_chunks: int = 1):
+                 kv_chunks: int = 1,
+                 health=None,
+                 brownout_priority: Optional[int] = None):
         assert 0.0 < prefill_frac < 1.0 or prefill_pool is not None
         self.prefill_frac = prefill_frac
+        # same semantics as JSEDRouter: breaker-open groups drop out of
+        # both pools (fail-open per pool), degraded groups pay a score
+        # penalty, low-priority requests shed during a brown-out
+        self.health = health
+        self.brownout_priority = brownout_priority
         self.max_kv_lag = max_kv_lag
         self.slo_shed = slo_shed
         self.session_affinity = session_affinity
@@ -307,13 +343,18 @@ class PDRouter(Router):
     def _best(self, pool: List[int], req, replicas, now,
               phase: str) -> int:
         # explicit first-minimum loop == min(pool, key=(delay, i))
+        h = self.health
         rep = replicas[pool[0]]
         best = pool[0]
         best_s = (rep.backlog(now)
                   + rep.predicted_phase_service(req, phase))
+        if h is not None:
+            best_s += h.penalty(best, now)
         for i in pool[1:]:
             rep = replicas[i]
             s = rep.backlog(now) + rep.predicted_phase_service(req, phase)
+            if h is not None:
+                s += h.penalty(i, now)
             if s < best_s:
                 best, best_s = i, s
         return best
@@ -353,12 +394,28 @@ class PDRouter(Router):
             pre_pool = dec_pool
         if not dec_pool:
             dec_pool = pre_pool
+        h = self.health
+        if h is not None:
+            if self.brownout_priority is not None and h.degraded(now) \
+                    and getattr(req, "priority", 0) \
+                    < self.brownout_priority:
+                return -1       # brown-out: low priority sheds first
+            ok_pre = [i for i in pre_pool if h.allow(i, now)]
+            ok_dec = [i for i in dec_pool if h.allow(i, now)]
+            if ok_pre:          # fail open per pool
+                pre_pool = ok_pre
+            if ok_dec:
+                dec_pool = ok_dec
         # A stale or abandoned home is only dropped once the request is
         # actually ADMITTED — shedding a request must leave session
         # state untouched (same invariant as JSEDRouter.route).
         drop_home = False
         if self.session_affinity and req.session is not None:
             home = self._session_decode.get(req.session)
+            if home is not None and h is not None \
+                    and not h.allow(home, now):
+                # breaker open on the home group: re-split afresh
+                home = None
             if home is not None and not getattr(replicas[home],
                                                 "eligible", True):
                 # resident state left with the group; re-split afresh

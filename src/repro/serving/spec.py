@@ -348,8 +348,14 @@ class Deployment:
                 interconnect=spec.make_interconnect())
         return self._cluster
 
-    def _router(self):
+    def _router(self, health=None):
         kw = dict(self.spec.router_kwargs)
+        if health is not None:
+            # health-aware degraded routing: the same GroupHealth the
+            # DES records errors into is folded into the policy's
+            # scores (jsed / pd_split accept it; a policy without a
+            # health kwarg fails loudly here)
+            kw["health"] = health
         if self.spec.router == "pd_split":
             # the PD router's shed estimate should charge the same
             # transfer tail the DES will produce
@@ -496,12 +502,14 @@ class Deployment:
                 scale_prompt=p / bp,
                 scale_output=r.output_tokens / bo,
                 session=r.session, kv_bytes=kv,
-                slo=slo, slo_ttft=ttft))
+                slo=slo, slo_ttft=ttft,
+                priority=getattr(r, "priority", 0)))
         return out
 
     def simulate(self, trace: Optional[Sequence[WorkloadRequest]] = None,
                  *,
                  failures: Optional[Sequence[Tuple[float, int]]] = None,
+                 faults=None, recovery=None, health=None,
                  router=None, controller=None,
                  events: Optional[str] = "full",
                  reference: bool = False,
@@ -518,6 +526,21 @@ class Deployment:
         per call so no routing state leaks between replays.  When the
         spec declares ``slos`` they are stamped onto the trace
         (overriding any the trace already carried).
+
+        ``faults`` (a ``serving.faults.FaultPlan``) is the typed
+        superset of ``failures``: crashes with scheduled recovery,
+        straggle windows, and flaky KV links, all seeded.  ``recovery``
+        (a ``RecoveryConfig``) turns on checkpoint-based session
+        recovery — crash victims restore from their last periodic
+        checkpoint and replay the lost decode suffix on a survivor
+        instead of landing in ``dropped``.  ``health`` (a
+        ``GroupHealth``) is shared between the DES (which records
+        transfer errors and crash/recover flips into it) and the
+        per-call router (which folds its breaker state and penalties
+        into scoring); both ride along only with ``faults``.  The
+        contradictory-timeline validation
+        (``simulator.validate_timeline``) covers the merged
+        ``scale`` + ``failures`` + ``faults`` schedule.
 
         ``controller`` (a ``serving.controller.AutoscalePolicy``)
         closes the loop: it is bound to this deployment (provisioning
@@ -558,19 +581,30 @@ class Deployment:
                 raise ValueError(f"cannot fail group {g}; deployment "
                                  f"has {self.num_groups}")
             timeline.append(ControlEvent(float(t), "fail", g))
+        fstate = None
+        if faults is not None:
+            from repro.serving.faults import FaultPlan
+            fstate = (faults.bind(self.num_groups, recovery=recovery,
+                                  health=health)
+                      if isinstance(faults, FaultPlan) else faults)
+            timeline.extend(fstate.control_events())
+        elif recovery is not None or health is not None:
+            raise ValueError("recovery=/health= ride along with a "
+                             "faults= plan; pass one")
         replicas = cluster.build_replicas()
         if reference:
             for rep in replicas:
                 rep.reference = True
         return simulate_deployment(
-            replicas, creqs, router or self._router(),
+            replicas, creqs, router or self._router(health=health),
             interconnect=cluster.interconnect,
             kv_chunks=self.spec.kv_chunks,
             timeline=timeline,
             controller=controller,
             start_ineligible=sorted(self._reserve),
             events=events,
-            kv=self.spec.kv_model())
+            kv=self.spec.kv_model(),
+            faults=fstate)
 
     # ------------------------------------------------------------------ #
     def launch(self, cfg=None, params=None) -> "LaunchedDeployment":
@@ -636,6 +670,13 @@ class LaunchedDeployment:
         sync_every = int(ekw.get("sync_every", 4))
         self._engine_kw = dict(common, sync_every=sync_every)
         self._actions: List[Dict[str, Any]] = []
+        self._chaos = None              # bound FaultState (see inject)
+        self._store = None              # CheckpointStore under recovery
+        self.kv_retries = 0             # transparent shard retransmits
+        self.kv_corrupted = 0           # shards delivered corrupted
+        self.reprefills = 0             # handoffs re-prefilled on decode
+        self.lost_sessions = 0          # sessions lost to crashes
+        self.recovered_sessions = 0     # ... restored from checkpoints
         if spec.pd:
             chunk = (max(1, math.ceil(self.max_len / spec.kv_chunks))
                      if spec.kv_chunks > 1 else None)
@@ -655,6 +696,44 @@ class LaunchedDeployment:
             self._routable = [True] * len(self.engines)
 
     # ------------------------------------------------------------------ #
+    def inject(self, plan, recovery=None) -> "LaunchedDeployment":
+        """Arm a ``serving.faults.FaultPlan`` against the REAL engines
+        for the next :meth:`run` — the live counterpart of
+        ``Deployment.simulate(faults=...)``.
+
+        On the colocated pool (``pd=False``): ``crash`` hard-kills an
+        engine's resident sessions mid-run (``sessions.crash`` — state
+        unexported) and un-routes it until its ``recover_at``;
+        ``straggle`` paces the engine's decode loop down by ``factor``
+        over its window.  With ``recovery`` (a ``RecoveryConfig``) a
+        ``CheckpointStore`` polls non-destructive session snapshots
+        every ``interval`` seconds and crash victims restore on a
+        survivor from their last checkpoint — the truncated suffix
+        re-decodes bit-identically (greedy), so no accepted session is
+        lost; without it victims restart from scratch.
+
+        On the PD pair (``pd=True``, ``kv_chunks > 1``): ``flaky_link``
+        wraps the streamed KV handoff in a :class:`ChaosLink` —
+        per-shard failures retransmit up to the link's retry budget;
+        a shard that exhausts it arrives corrupted, the receiver's
+        checksum (``stream(checksum=True)``) catches it, and the
+        request falls back to re-prefilling on the decode engine with
+        bit-identical greedy tokens.  Crash/straggle chaos is rejected
+        there: the pair is a fixed topology.
+        """
+        from repro.serving.faults import CheckpointStore, GroupHealth
+        if self.spec.pd and (plan.crashes or plan.straggles):
+            raise ValueError("the pd pair is a fixed topology — only "
+                             "flaky_link chaos applies; run crash/"
+                             "straggle plans on the colocated pool "
+                             "(pd=False)")
+        n = len(self.engines)
+        self._chaos = plan.bind(n, recovery=recovery,
+                                health=GroupHealth(n))
+        self._store = (CheckpointStore(recovery)
+                       if recovery is not None else None)
+        return self
+
     def scale(self, *, add: Optional[Sequence[Sequence[str]]] = None,
               remove: Optional[Sequence[int]] = None,
               at: float = 0.0, warmup: float = 0.0
@@ -767,9 +846,23 @@ class LaunchedDeployment:
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         acts = list(self._actions)
         self._actions = []
-        while pending or acts or any(e._any_active()
-                                     for e in self.engines):
+        chaos = self._chaos
+        chaos_evs: List[Tuple[float, str, int]] = []
+        if chaos is not None:
+            for c in chaos.plan.crashes:
+                chaos_evs.append((c.t, "crash", c.group))
+                if c.recover_at is not None:
+                    chaos_evs.append((c.recover_at, "revive", c.group))
+            chaos_evs.sort()
+        waiting: List[Any] = []     # checkpointed crash victims, until
+        #                             a survivor has room to restore
+        ticks = 0
+        while pending or acts or chaos_evs or waiting \
+                or any(e._any_active() for e in self.engines):
             now = clk()
+            ticks += 1
+            if self._store is not None:
+                self._store.poll(self.engines, now)
             while pending and pending[0].arrival <= now:
                 eng = self._pick_engine()
                 if eng is None:
@@ -777,14 +870,46 @@ class LaunchedDeployment:
                 eng.admit_batch([pending.pop(0)], clk())
             while acts and acts[0]["at"] <= now:
                 self._apply_action(acts.pop(0), clk)
+            while chaos_evs and chaos_evs[0][0] <= now:
+                _, kind, g = chaos_evs.pop(0)
+                if kind == "crash":
+                    self._routable[g] = False
+                    chaos.health.trip(g, now)
+                    for req in self.engines[g].sessions.crash(clk()):
+                        self.lost_sessions += 1
+                        if self._store is not None \
+                                and req.rid in self._store:
+                            waiting.append(req)
+                        else:           # no checkpoint: from scratch
+                            del req.output[:]
+                            pending.append(req)
+                    pending.sort(key=lambda r: (r.arrival, r.rid))
+                else:                   # revive
+                    self._routable[g] = True
+                    chaos.health.reset(g, now)
+            if waiting:
+                still = []
+                for req in waiting:
+                    tgt = self._pick_engine()
+                    if tgt is not None and \
+                            self._store.restore(req, tgt, clk()):
+                        self.recovered_sessions += 1
+                    else:               # no room yet: retry next tick
+                        still.append(req)
+                waiting = still
             stepped = False
-            for eng in self.engines:
+            for g, eng in enumerate(self.engines):
+                if chaos is not None:
+                    f = chaos.straggle_factor(g, now)
+                    if f > 1.0 and ticks % max(int(round(f)), 1):
+                        continue        # straggler: skip this tick
                 if eng._any_active():
                     eng.step(clk())
                     stepped = True
             if not stepped:
                 due = [r.arrival for r in pending[:1]] \
-                    + [a["at"] for a in acts[:1]]
+                    + [a["at"] for a in acts[:1]] \
+                    + [e[0] for e in chaos_evs[:1]]
                 if due:
                     time.sleep(min(0.05, max(0.0, min(due) - clk())))
         for eng in self.engines:
@@ -797,10 +922,17 @@ class LaunchedDeployment:
         for k in ("mean_ttft", "mean_tpot", "mean_norm_latency"):
             agg[k] = (sum(s[k] * s["completed"] for s in summaries)
                       / done if done else 0.0)
-        return {"engine": agg, "engines": summaries,
-                "wire_bytes": self.wire_bytes, "shards": self.shards,
-                "migrations": self.migrations,
-                "routable": list(self._routable)}
+        out = {"engine": agg, "engines": summaries,
+               "wire_bytes": self.wire_bytes, "shards": self.shards,
+               "migrations": self.migrations,
+               "routable": list(self._routable)}
+        if chaos is not None:
+            out.update(
+                lost_sessions=self.lost_sessions,
+                recovered_sessions=self.recovered_sessions,
+                checkpoints=(self._store.checkpoints
+                             if self._store is not None else 0))
+        return out
 
     # ------------------------------------------------------------------ #
     def _counted(self, gen):
@@ -810,13 +942,25 @@ class LaunchedDeployment:
                 self.wire_bytes += item["bytes"]
             yield item
 
+    def _counted_native(self, gen):
+        """Shard accounting for a native ``sessions.stream`` (KvSlice /
+        SessionState items — the chaos-injected path keeps the typed
+        shards so checksums survive to the receiver)."""
+        from repro.serving.kvpool import SessionState
+        for item in gen:
+            if not isinstance(item, SessionState):
+                self.shards += 1
+                self.wire_bytes += item.nbytes
+            yield item
+
     def run(self, requests: Sequence) -> Dict[str, Any]:
         """Serve ``requests`` (engine ``Request`` objects, mutated in
         place with outputs/timestamps) to completion.  Returns a stats
         dict; for a PD pair the decode engine's stats are the
         user-visible ones (it streams every token)."""
         if not self.spec.pd:
-            if len(self.engines) == 1 and not self._actions:
+            if len(self.engines) == 1 and not self._actions \
+                    and self._chaos is None:
                 # solo fast path: identical to the pre-elastic backend
                 stats = self.engine.run(list(requests))
                 return {"engine": stats.summary(), "wire_bytes": 0,
@@ -830,11 +974,38 @@ class LaunchedDeployment:
 
         ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
         if self.spec.kv_chunks > 1:
+            link = (self._chaos.live_link(0, 1)
+                    if self._chaos is not None else None)
             for req in ordered:
-                gen = self._counted(pre.prefill_handoff_stream(req,
-                                                               clk()))
-                while not dec.admit_handoff_stream(req, gen, clk()):
-                    dec.step(clk())     # drain a slot, retry
+                if link is None:
+                    gen = self._counted(
+                        pre.prefill_handoff_stream(req, clk()))
+                    while not dec.admit_handoff_stream(req, gen, clk()):
+                        dec.step(clk())     # drain a slot, retry
+                    continue
+                # chaos-injected handoff: checksummed typed shards
+                # through the flaky channel.  Transient failures
+                # retransmit inside the link; a shard that exhausts
+                # its retries arrives corrupted and the receiver's
+                # checksum trips.
+                from repro.serving.kvpool import ShardChecksumError
+                shards = link.wrap(self._counted_native(
+                    pre.sessions.stream(req, clk(), checksum=True)))
+                try:
+                    while not dec.sessions.receive(req, shards, clk()):
+                        dec.step(clk())     # drain a slot, retry
+                except ShardChecksumError:
+                    # poisoned transfer: run BOTH phases on the decode
+                    # engine instead.  The aborted stream never touched
+                    # req.output, so the greedy tokens of the re-prefill
+                    # are bit-identical to the fault-free run.
+                    self.reprefills += 1
+                    del req.output[:]
+                    while not dec.admit_batch([req], clk()):
+                        dec.step(clk())
+            if link is not None:
+                self.kv_retries = link.retries
+                self.kv_corrupted = link.corrupted
         else:
             handoffs: List[Tuple[Any, Dict]] = []
             for req in ordered:
@@ -851,6 +1022,11 @@ class LaunchedDeployment:
         while dec._any_active():
             dec.step(clk())
         dec.sync(clk())
-        return {"engine": dec.stats.summary(),
-                "prefill": pre.stats.summary(),
-                "wire_bytes": self.wire_bytes, "shards": self.shards}
+        out = {"engine": dec.stats.summary(),
+               "prefill": pre.stats.summary(),
+               "wire_bytes": self.wire_bytes, "shards": self.shards}
+        if self._chaos is not None:
+            out.update(kv_retries=self.kv_retries,
+                       kv_corrupted=self.kv_corrupted,
+                       reprefills=self.reprefills)
+        return out

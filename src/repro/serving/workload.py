@@ -97,6 +97,8 @@ class WorkloadRequest:
     session: Optional[int] = None   # multi-turn conversation id
     slo: Optional[float] = None     # completion deadline (s of latency)
     slo_ttft: Optional[float] = None    # first-token deadline (s)
+    priority: int = 0           # brown-out shedding order (higher
+    #                             survives longer; see router health)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,519 @@
+"""Chaos-hardened serving, DES side + fault-plan units.
+
+Covers:
+  * FaultPlan: typed validation, JSON round trip (unknown fields
+    rejected), seeded determinism of the bound per-link RNGs,
+  * ControlEvent timeline validation — the regression tests for
+    contradictory timelines (duplicate fails, "up" for an eligible
+    group, fail-after-down) that the pre-validation code replayed
+    silently,
+  * crash + scheduled recovery through the existing "up" path,
+  * straggle windows: service-time inflation both DES walks apply
+    identically (same-seed-same-event-log, reference vs fast),
+  * flaky KV links: seeded per-chunk failures with retry/backoff
+    accounting, p=0 bit-identity, deadline-blown re-prefill fallback,
+  * checkpoint-based recovery: a full-outage blip drops accepted
+    in-flight sessions under naive drop-and-reroute and ZERO under
+    recovery, at higher goodput,
+  * GroupHealth breaker transitions + health-aware JSED/PD routing
+    (open groups skipped, brown-out priority shedding),
+  * the runtime/fault.py DeviceHealth shim over the same primitives.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from conftest import random_dag
+from repro.core.simulator import ControlEvent, validate_timeline
+from repro.serving.faults import (BreakerConfig, Crash, DeviceHealth,
+                                  FaultPlan, FlakyLink, GroupHealth,
+                                  RecoveryConfig, Straggle)
+from repro.serving.router import JSEDRouter, PDRouter
+from repro.serving.spec import DeploymentSpec
+from repro.serving.workload import WorkloadRequest, poisson_trace
+
+GROUPS = [["h100", "rtxpro6000"], ["a100", "l40s"], ["a100", "l40s"]]
+ANNEAL = 200
+
+
+def pd_graph(n: int = 24, seed: int = 2):
+    g = random_dag(n, seed=seed)
+    nodes = [dataclasses.replace(
+        node, phase="prefill" if node.idx < n // 2 else "decode")
+        for node in g.nodes]
+    g2 = type(g)(nodes, dict(g.edges), name=g.name + ".dep")
+    g2.validate()
+    return g2
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return pd_graph()
+
+
+@pytest.fixture(scope="module")
+def deployment(graph):
+    return DeploymentSpec(groups=GROUPS,
+                          anneal_iters=ANNEAL).compile(graph)
+
+
+@pytest.fixture(scope="module")
+def trace(deployment):
+    return poisson_trace(rate=1.5 * deployment.cluster().capacity,
+                         num_requests=150, seed=5)
+
+
+def _result_key(res):
+    """Everything that must be identical between two replays."""
+    return (res.completed, res.dropped, res.shed, res.rerouted,
+            res.recovered, res.kv_retries, res.kv_refills,
+            res.makespan, tuple(res.latencies), tuple(res.assignments))
+
+
+# ===================================================================== #
+# FaultPlan: validation + JSON round trip
+# ===================================================================== #
+def test_plan_round_trip():
+    plan = (FaultPlan(seed=7)
+            .crash(3.0, group=1, recover_at=5.0)
+            .crash(8.0, group=0)
+            .straggle(1.0, 2.0, group=0, factor=3.0)
+            .flaky_link(0, 1, p=0.05, seed=2, max_retries=4,
+                        backoff=2e-3, deadline=0.5))
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    assert json.loads(plan.to_json())["seed"] == 7
+
+
+def test_plan_round_trip_file(tmp_path):
+    plan = FaultPlan(seed=3).crash(1.0, group=0, recover_at=2.0)
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    assert FaultPlan.load(path) == plan
+
+
+def test_plan_rejects_unknown_json_fields():
+    with pytest.raises(ValueError, match="unknown FaultPlan fields"):
+        FaultPlan.from_json('{"seed": 0, "mystery": []}')
+
+
+@pytest.mark.parametrize("build", [
+    lambda p: p.crash(3.0, group=1, recover_at=3.0),   # not strictly later
+    lambda p: p.crash(1.0, group=-1),
+    lambda p: p.straggle(2.0, 2.0, group=0, factor=2.0),   # empty window
+    lambda p: p.straggle(1.0, 2.0, group=0, factor=0.0),
+    lambda p: p.flaky_link(0, 0, p=0.5),               # src == dst
+    lambda p: p.flaky_link(0, 1, p=1.5),               # p out of range
+    lambda p: p.flaky_link(0, 1, p=0.5, deadline=0.0),
+], ids=["recover-at-t", "neg-group", "empty-straggle", "zero-factor",
+        "self-link", "bad-p", "bad-deadline"])
+def test_plan_rejects_bad_specs(build):
+    with pytest.raises(ValueError):
+        build(FaultPlan())
+
+
+def test_plan_rejects_overlapping_straggles():
+    plan = FaultPlan().straggle(1.0, 2.0, group=0, factor=2.0)
+    with pytest.raises(ValueError, match="overlap"):
+        plan.straggle(1.5, 2.5, group=0, factor=3.0)
+    # disjoint window and other group are both fine
+    plan.straggle(2.0, 3.0, group=0, factor=3.0)
+    plan.straggle(1.5, 2.5, group=1, factor=3.0)
+
+
+def test_bind_checks_group_range():
+    with pytest.raises(ValueError, match="deployment has 2"):
+        FaultPlan().crash(1.0, group=2).bind(2)
+    with pytest.raises(ValueError, match="exceeds 2 groups"):
+        FaultPlan().flaky_link(0, 2, p=0.1).bind(2)
+
+
+def test_bound_link_rngs_are_seeded_and_fresh():
+    plan = FaultPlan(seed=9).flaky_link(0, 1, p=0.5)
+    a = [plan.bind(2).link(0, 1).rng.random() for _ in range(8)]
+    b = [plan.bind(2).link(0, 1).rng.random() for _ in range(8)]
+    assert a == b                       # same seed -> same draws
+    c = [FaultPlan(seed=10).flaky_link(0, 1, p=0.5)
+         .bind(2).link(0, 1).rng.random() for _ in range(8)]
+    assert a != c                       # seed actually matters
+
+
+def test_control_events_cover_crash_and_straggle():
+    plan = (FaultPlan().crash(3.0, group=1, recover_at=5.0)
+            .straggle(1.0, 2.0, group=0, factor=4.0))
+    evs = {(e.time, e.kind, e.group, e.factor)
+           for e in plan.control_events()}
+    assert evs == {(3.0, "fail", 1, 1.0), (5.0, "up", 1, 1.0),
+                   (1.0, "slow", 0, 4.0), (2.0, "slow", 0, 1.0)}
+
+
+# ===================================================================== #
+# Satellite: contradictory-timeline validation (regression — the
+# pre-validation code replayed these silently)
+# ===================================================================== #
+def test_timeline_rejects_duplicate_fail():
+    with pytest.raises(ValueError, match="already down"):
+        validate_timeline([ControlEvent(1.0, "fail", 0),
+                           ControlEvent(2.0, "fail", 0)], 2)
+
+
+def test_timeline_rejects_fail_after_down():
+    with pytest.raises(ValueError, match="already down"):
+        validate_timeline([ControlEvent(1.0, "down", 0),
+                           ControlEvent(2.0, "fail", 0)], 2)
+
+
+def test_timeline_rejects_up_for_eligible_group():
+    # the first "up" after a fail is a recovery; a SECOND one is a
+    # contradiction (the group is already back)
+    with pytest.raises(ValueError, match="already eligible"):
+        validate_timeline([ControlEvent(1.0, "fail", 0),
+                           ControlEvent(2.0, "up", 0),
+                           ControlEvent(3.0, "up", 0)], 2)
+
+
+def test_timeline_rejects_out_of_range_group():
+    with pytest.raises(ValueError, match="names group 5"):
+        validate_timeline([ControlEvent(1.0, "fail", 5)], 2)
+
+
+def test_timeline_first_up_is_warmup_recovery_up_is_not():
+    # sole "up" = warm-up: the group starts masked
+    assert validate_timeline([ControlEvent(1.0, "up", 1)], 2) == {1}
+    # fail-then-up = crash recovery: the group must NOT start masked
+    assert validate_timeline([ControlEvent(1.0, "fail", 1),
+                              ControlEvent(2.0, "up", 1)], 2) == set()
+
+
+def test_timeline_reserve_groups_may_come_up():
+    # a parked reserve group is down at start; its activation "up" is
+    # legal and does not mark it as warming up twice
+    assert validate_timeline([ControlEvent(1.0, "up", 1)], 2,
+                             start_ineligible=[1]) == set()
+
+
+def test_simulate_rejects_contradictory_failures(deployment, trace):
+    with pytest.raises(ValueError, match="already down"):
+        deployment.simulate(trace, failures=[(1.0, 1), (2.0, 1)])
+
+
+def test_slow_events_validate_group_only():
+    assert validate_timeline([ControlEvent(1.0, "slow", 0, factor=2.0),
+                              ControlEvent(2.0, "slow", 0, factor=2.0)],
+                             1) == set()
+
+
+def test_control_event_validates_kind_and_factor():
+    with pytest.raises(ValueError):
+        ControlEvent(1.0, "explode", 0)
+    with pytest.raises(ValueError):
+        ControlEvent(1.0, "slow", 0, factor=0.0)
+
+
+# ===================================================================== #
+# DES: crash + recovery via the "up" path
+# ===================================================================== #
+def test_crash_with_recovery_serves_after_recover_at(deployment, trace):
+    mid = trace[len(trace) // 2].arrival
+    base = deployment.simulate(trace)
+    perm = deployment.simulate(trace, faults=FaultPlan().crash(
+        mid, group=1))
+    back = deployment.simulate(trace, faults=FaultPlan().crash(
+        mid, group=1, recover_at=mid + 1e-3))
+    # the returned group takes arrivals again: strictly more work lands
+    # on group 1 than under the permanent kill
+    per_g1 = [r.per_replica_completed[1] for r in (perm, back)]
+    assert per_g1[1] > per_g1[0]
+    assert base.completed >= back.completed >= perm.completed
+
+
+def test_faults_none_noop_and_equivalent_to_failures(deployment, trace):
+    """faults=permanent-crash == legacy failures=[(t, g)] exactly."""
+    mid = trace[len(trace) // 2].arrival
+    legacy = deployment.simulate(trace, failures=[(mid, 1)])
+    plan = deployment.simulate(trace,
+                               faults=FaultPlan().crash(mid, group=1))
+    assert _result_key(legacy) == _result_key(plan)
+    assert legacy.events == plan.events
+
+
+# ===================================================================== #
+# DES: straggle windows
+# ===================================================================== #
+def test_straggle_inflates_service_and_recovers(deployment, trace):
+    base = deployment.simulate(trace)
+    t1 = trace[-1].arrival
+    slow = deployment.simulate(trace, faults=FaultPlan().straggle(
+        0.0, t1 * 0.5, group=0, factor=8.0))
+    assert slow.completed + slow.shed + slow.dropped == len(trace)
+    # an 8x straggler on one group strictly hurts the latency profile
+    assert sum(slow.latencies) > sum(base.latencies)
+    # ... but the window closes: a run with the window over the whole
+    # trace is strictly worse than the half-trace window
+    slower = deployment.simulate(trace, faults=FaultPlan().straggle(
+        0.0, t1 * 10.0, group=0, factor=8.0))
+    assert sum(slower.latencies) > sum(slow.latencies)
+
+
+def test_straggle_same_seed_same_event_log_both_walks(deployment, trace):
+    """Satellite: the full chaos plan replays bit-identically on the
+    reference per-unit walk and the fast vectorized walk."""
+    mid = trace[len(trace) // 2].arrival
+    plan = (FaultPlan(seed=11)
+            .crash(mid, group=1, recover_at=mid + 1.0)
+            .straggle(mid * 0.2, mid * 0.9, group=0, factor=3.0))
+    kw = dict(faults=plan, recovery=RecoveryConfig(interval=1e-3))
+    fast = deployment.simulate(trace, **kw)
+    fast2 = deployment.simulate(trace, **kw)
+    ref = deployment.simulate(trace, reference=True, **kw)
+    assert _result_key(fast) == _result_key(fast2)      # deterministic
+    assert fast.events == fast2.events
+    assert _result_key(fast) == _result_key(ref)        # walk parity
+    assert fast.events == ref.events
+
+
+# ===================================================================== #
+# DES: flaky KV links (pd deployments)
+# ===================================================================== #
+@pytest.fixture(scope="module")
+def pd_deployment(graph):
+    return DeploymentSpec(groups=GROUPS, router="pd_split",
+                          pd=True, kv_chunks=4,
+                          anneal_iters=ANNEAL).compile(graph)
+
+
+def test_flaky_link_p0_bit_identical(pd_deployment, trace):
+    base = pd_deployment.simulate(trace)
+    p0 = pd_deployment.simulate(trace, faults=FaultPlan().flaky_link(
+        0, 1, p=0.0))
+    assert _result_key(base) == _result_key(p0)
+    assert base.events == p0.events
+    assert p0.kv_retries == 0 and p0.kv_refills == 0
+
+
+def _all_links_plan(seed, **kw):
+    """Flaky links on every directed pair — the PD router may pick any
+    (prefill, decode) edge among the groups."""
+    plan = FaultPlan(seed=seed)
+    for s in range(len(GROUPS)):
+        for d in range(len(GROUPS)):
+            if s != d:
+                plan.flaky_link(s, d, **kw)
+    return plan
+
+
+def test_flaky_link_charges_retries(pd_deployment, trace):
+    base = pd_deployment.simulate(trace)
+    flaky = pd_deployment.simulate(
+        trace, faults=_all_links_plan(5, p=0.2, max_retries=8,
+                                      deadline=10.0))
+    assert flaky.kv_retries > 0
+    # retries charge fabric time: transfer seconds strictly grow
+    assert flaky.transfer_seconds > base.transfer_seconds
+    # generous retry budget + deadline: nothing aborts, nothing lost
+    assert flaky.kv_refills == 0
+    assert flaky.completed + flaky.shed + flaky.dropped == len(trace)
+
+
+def test_flaky_link_deadline_refills_on_decode(pd_deployment, trace):
+    """Exhausted retries / blown deadline abort the handoff: the
+    request re-prefills on the decode group (kv_refills) instead of
+    being dropped — never-later is preserved as not-lost."""
+    hostile = pd_deployment.simulate(
+        trace, faults=_all_links_plan(5, p=0.9, max_retries=1,
+                                      deadline=1e-6))
+    assert hostile.kv_refills > 0
+    assert hostile.dropped == 0
+    assert hostile.completed + hostile.shed == len(trace)
+
+
+def test_flaky_link_seeded_determinism(pd_deployment, trace):
+    plan = _all_links_plan(6, p=0.3, max_retries=4)
+    a = pd_deployment.simulate(trace, faults=plan)
+    b = pd_deployment.simulate(trace, faults=plan)
+    assert _result_key(a) == _result_key(b)
+    assert a.events == b.events
+    other = pd_deployment.simulate(
+        trace, faults=_all_links_plan(60, p=0.3, max_retries=4))
+    assert other.kv_retries != a.kv_retries or \
+        other.events != a.events
+
+
+# ===================================================================== #
+# DES: checkpoint recovery beats naive drop-and-reroute
+# ===================================================================== #
+def test_full_outage_blip_recovery_drops_nothing(deployment, trace):
+    """Every group crashes and comes back: naive loses the in-flight
+    accepted sessions, recovery parks + replays them from checkpoints
+    at higher goodput."""
+    mid = trace[len(trace) // 2].arrival
+    plan = FaultPlan(seed=1)
+    for g in range(len(GROUPS)):
+        plan.crash(mid, group=g, recover_at=mid + 0.01)
+    naive = deployment.simulate(trace, faults=plan)
+    # checkpoint interval well under the sub-millisecond decode times
+    # of this toy-scale DES, so victims have checkpoint progress
+    rec = deployment.simulate(trace, faults=plan,
+                              recovery=RecoveryConfig(interval=1e-5),
+                              health=GroupHealth())
+    assert naive.dropped > 0
+    assert rec.dropped == 0
+    assert rec.recovered > 0
+    assert rec.completed > naive.completed          # goodput win
+    assert rec.completed + rec.shed == len(trace)
+
+
+def test_recovery_replays_only_the_lost_suffix(deployment, trace):
+    """Checkpointed victims replay less decode than from-scratch
+    victims: recovery's makespan tail is no worse and its completions
+    are at least as many."""
+    mid = trace[len(trace) // 2].arrival
+    plan = FaultPlan().crash(mid, group=1, recover_at=mid + 0.01)
+    naive = deployment.simulate(trace, faults=plan)
+    rec = deployment.simulate(trace, faults=plan,
+                              recovery=RecoveryConfig(interval=1e-3))
+    assert rec.completed >= naive.completed
+    assert rec.dropped == 0
+
+
+def test_recovery_requires_faults(deployment, trace):
+    with pytest.raises(ValueError, match="faults"):
+        deployment.simulate(trace, recovery=RecoveryConfig())
+
+
+# ===================================================================== #
+# GroupHealth: breaker transitions + health-aware routing
+# ===================================================================== #
+def test_breaker_lifecycle():
+    h = GroupHealth(2, BreakerConfig(alpha=0.5, open_threshold=0.6,
+                                     cooldown=1.0))
+    assert h.state(0, 0.0) == "closed" and h.allow(0, 0.0)
+    h.record_error(0, 0.0)              # rate 0.5 < 0.6: still closed
+    assert h.state(0, 0.0) == "closed"
+    h.record_error(0, 0.1)              # rate 0.75: opens
+    assert h.state(0, 0.1) == "open" and not h.allow(0, 0.1)
+    assert h.state(0, 0.5) == "open"    # cooldown not elapsed
+    assert h.state(0, 1.2) == "half_open"   # probes allowed
+    h.record_error(0, 1.3)              # failed probe: re-opens
+    assert h.state(0, 1.3) == "open"
+    assert h.state(0, 2.4) == "half_open"
+    h.record_ok(0, 2.5)                 # successful probe: closes
+    assert h.state(0, 2.5) == "closed"
+    assert not h.degraded(2.5)
+
+
+def test_breaker_trip_latches_until_reset():
+    h = GroupHealth(2, BreakerConfig(cooldown=0.1))
+    h.trip(0, 0.0)
+    assert h.state(0, 99.0) == "open"   # cooldown does NOT half-open
+    assert h.degraded(99.0)
+    h.reset(0, 99.0)
+    assert h.state(0, 99.0) == "half_open"
+    h.record_ok(0, 99.1)
+    assert h.state(0, 99.1) == "closed"
+
+
+def test_breaker_penalty_tracks_error_rate():
+    h = GroupHealth(2, BreakerConfig(alpha=0.5, open_threshold=2.0,
+                                     penalty=10.0))
+    assert h.penalty(0, 0.0) == 0.0
+    h.record_error(0, 0.0)
+    assert h.penalty(0, 0.0) == pytest.approx(5.0)
+    assert h.penalty(1, 0.0) == 0.0     # per-group isolation
+
+
+class _StubReplica:
+    def __init__(self, backlog=0.0, eligible=True):
+        self._b = backlog
+        self.eligible = eligible
+
+    def backlog(self, now):
+        return self._b
+
+    def predicted_service(self, req):
+        return 1.0
+
+    def predicted_phase_service(self, req, phase):
+        return 0.5
+
+
+def _wreq(rid=0, priority=0):
+    from repro.core.simulator import ClusterRequest
+    return ClusterRequest(rid=rid, arrival=0.0, priority=priority)
+
+
+def test_jsed_skips_open_breaker_and_fails_open():
+    h = GroupHealth(2)
+    router = JSEDRouter(health=h)
+    reps = [_StubReplica(backlog=0.0), _StubReplica(backlog=5.0)]
+    assert router.route(_wreq(), reps, 0.0) == 0
+    h.trip(0, 0.0)                      # best group's breaker opens
+    assert router.route(_wreq(1), reps, 0.0) == 1
+    h.trip(1, 0.0)                      # ALL open: fail open, not -1
+    assert router.route(_wreq(2), reps, 0.0) in (0, 1)
+
+
+def test_jsed_brownout_sheds_low_priority_first():
+    h = GroupHealth(2)
+    router = JSEDRouter(health=h, brownout_priority=1)
+    reps = [_StubReplica(), _StubReplica()]
+    assert router.route(_wreq(0, priority=0), reps, 0.0) >= 0
+    h.trip(0, 0.0)                      # brown-out begins
+    assert router.route(_wreq(1, priority=0), reps, 0.0) == -1
+    assert router.route(_wreq(2, priority=1), reps, 0.0) == 1
+    h.reset(0, 0.0)
+    h.record_ok(0, 0.1)                 # probe closes the breaker
+    assert router.route(_wreq(3, priority=0), reps, 0.2) >= 0
+
+
+def test_jsed_health_none_bit_identical():
+    reps = [_StubReplica(backlog=2.0), _StubReplica(backlog=1.0)]
+    plain = JSEDRouter()
+    health = JSEDRouter(health=None)
+    for rid in range(5):
+        assert plain.route(_wreq(rid), reps, 0.0) \
+            == health.route(_wreq(rid), reps, 0.0)
+
+
+def test_pd_router_brownout_and_penalty():
+    h = GroupHealth(2)
+    router = PDRouter(prefill_pool=[0], decode_pool=[1], health=h,
+                      brownout_priority=5)
+    reps = [_StubReplica(), _StubReplica()]
+    out = router.route(_wreq(0, priority=5), reps, 0.0)
+    assert out != -1
+    h.trip(1, 0.0)
+    assert router.route(_wreq(1, priority=0), reps, 0.0) == -1  # brown-out
+    out = router.route(_wreq(2, priority=9), reps, 0.0)         # survives
+    assert out != -1
+
+
+def test_des_health_integration_records_crash(deployment, trace):
+    """The GroupHealth handed to simulate() observes the DES crash and
+    recovery, and the router sees its penalties."""
+    mid = trace[len(trace) // 2].arrival
+    h = GroupHealth()
+    deployment.simulate(trace, faults=FaultPlan().crash(
+        mid, group=1, recover_at=mid + 1.0), health=h)
+    # post-run: group 1 was tripped then reset to half-open; with no
+    # probe traffic after the trace it cannot have silently closed
+    assert h.error_rate(1) > 0.0
+    assert h.state(1, mid + 2.0) in ("half_open", "closed")
+
+
+# ===================================================================== #
+# runtime/fault.py shim
+# ===================================================================== #
+def test_device_health_shim_is_the_faults_primitive():
+    import repro.runtime.fault as rf
+    assert rf.DeviceHealth is DeviceHealth
+
+
+def test_device_health_latches_breakers():
+    dh = DeviceHealth([True] * 3)
+    assert dh.lost() == set()
+    dh.fail(1)
+    assert dh.lost() == {1}
+    assert dh.alive == [True, False, True]
+    assert dh.breakers.state(1, 1e9) == "open"      # latched
+    assert dh.breakers.allow(0, 0.0)

@@ -1,0 +1,190 @@
+"""Rollback paths of SessionManager.migrate / prefetch under receiver
+exhaustion.
+
+The two bare asserts at the end of ``SessionManager.migrate`` ("failed
+to re-import unmigrated session") and ``SessionManager.prefetch``
+("failed to return prefetched session to peer") are the safety net for
+a receiver that cannot take a session — slots full, or (paged,
+``spill=False``) block pool exhausted.  These tests drive both
+rollback paths on real engines and assert the rolled-back sessions
+finish decoding bit-identically to never having attempted the move.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def _smoke(arch):
+    return dataclasses.replace(configs.get_smoke(arch), dtype="float32")
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in sizes]
+
+
+def _reqs(prompts, max_new=6, rid0=0):
+    return [Request(rid=rid0 + i, prompt=p.copy(),
+                    max_new_tokens=max_new, arrival=0.0)
+            for i, p in enumerate(prompts)]
+
+
+def _drain(eng, t=0.0):
+    while eng._any_active():
+        eng.step(t)
+        eng.sync(t)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _smoke("llama3_8b")
+    return cfg, M.init_params(cfg)
+
+
+# ===================================================================== #
+# migrate: peer cannot take — sessions re-import locally
+# ===================================================================== #
+def test_migrate_rolls_back_when_peer_slots_full(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (4, 6), seed=7)
+
+    ref = _reqs(prompts)
+    e_ref = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    e_ref.run(ref)
+
+    mig = _reqs(prompts)
+    src = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    peer = ServingEngine(cfg, params, slots=1, max_len=32, sync_every=2)
+    blocker = _reqs(_prompts(cfg, (5,), seed=8), max_new=12, rid0=100)
+    assert peer.admit_batch(blocker, 0.0) == 1      # peer's only slot
+    assert src.admit_batch(mig, 0.0) == 2
+    src.step(0.0)
+    src.step(0.0)
+    # peer has no free slot: nothing moves, everything re-imports
+    assert src.sessions.migrate(peer, 0.0) == 0
+    assert sorted(r.rid for r in src.active if r is not None) == [0, 1]
+    _drain(src)
+    _drain(peer)
+    for a, b in zip(ref, mig):
+        assert a.output == b.output     # rollback was loss-free
+
+
+def test_migrate_rolls_back_when_peer_pool_exhausted(setup):
+    """Paged peer with a free SLOT but an exhausted block pool
+    (spill=False): restore fails at reserve, the session re-imports
+    locally through the migrate rollback assert."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (4, 6), seed=7)
+
+    ref = _reqs(prompts)
+    e_ref = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    e_ref.run(ref)
+
+    mig = _reqs(prompts)
+    src = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    # 2 slots but a pool of exactly one 32-token session: the blocker
+    # takes every block, and spill=False forbids making room
+    peer = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2,
+                         kv_block_tokens=8, kv_pool_blocks=4,
+                         spill=False)
+    blocker = _reqs(_prompts(cfg, (20,), seed=8), max_new=11, rid0=100)
+    assert peer.admit_batch(blocker, 0.0) == 1
+    assert peer.active.count(None) >= 1             # slot IS free
+    assert src.admit_batch(mig, 0.0) == 2
+    src.step(0.0)
+    src.step(0.0)
+    assert src.sessions.migrate(peer, 0.0) == 0     # pool said no
+    assert sorted(r.rid for r in src.active if r is not None) == [0, 1]
+    _drain(src)
+    _drain(peer)
+    for a, b in zip(ref, mig):
+        assert a.output == b.output
+
+
+def test_migrate_partial_move_rolls_back_the_rest(setup):
+    """Peer takes exactly one of two sessions; the other re-imports
+    locally.  Both finish bit-identically wherever they ended up."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (4, 6), seed=7)
+
+    ref = _reqs(prompts)
+    e_ref = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    e_ref.run(ref)
+
+    mig = _reqs(prompts)
+    src = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    peer = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    blocker = _reqs(_prompts(cfg, (5,), seed=8), max_new=12, rid0=100)
+    assert peer.admit_batch(blocker, 0.0) == 1      # one slot left
+    assert src.admit_batch(mig, 0.0) == 2
+    src.step(0.0)
+    src.step(0.0)
+    assert src.sessions.migrate(peer, 0.0) == 1
+    assert sum(1 for r in src.active if r is not None) == 1
+    _drain(src)
+    _drain(peer)
+    for a, b in zip(ref, mig):
+        assert a.output == b.output
+
+
+# ===================================================================== #
+# prefetch: local engine cannot take — session returns to the peer
+# ===================================================================== #
+def test_prefetch_returns_session_when_local_full(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (5, 4), seed=9)
+
+    ref = _reqs(prompts)
+    e_ref = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    e_ref.run(ref)
+
+    far = _reqs(prompts)
+    peer = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    local = ServingEngine(cfg, params, slots=1, max_len=32, sync_every=2)
+    blocker = _reqs(_prompts(cfg, (5,), seed=10), max_new=12, rid0=100)
+    assert local.admit_batch(blocker, 0.0) == 1     # local's only slot
+    assert peer.admit_batch(far, 0.0) == 2
+    peer.step(0.0)
+    peer.step(0.0)
+    # local cannot take it: the pull fails and the session must be
+    # back on the peer (the prefetch rollback assert)
+    assert not local.sessions.prefetch(far[0].rid, peer, 0.0)
+    assert any(r is not None and r.rid == far[0].rid
+               for r in peer.active)
+    _drain(peer)
+    _drain(local)
+    for a, b in zip(ref, far):
+        assert a.output == b.output
+
+
+def test_prefetch_returns_session_when_local_pool_exhausted(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg, (5, 4), seed=9)
+
+    ref = _reqs(prompts)
+    e_ref = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    e_ref.run(ref)
+
+    far = _reqs(prompts)
+    peer = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2)
+    local = ServingEngine(cfg, params, slots=2, max_len=32, sync_every=2,
+                          kv_block_tokens=8, kv_pool_blocks=4,
+                          spill=False)
+    blocker = _reqs(_prompts(cfg, (20,), seed=10), max_new=11, rid0=100)
+    assert local.admit_batch(blocker, 0.0) == 1     # takes every block
+    assert peer.admit_batch(far, 0.0) == 2
+    peer.step(0.0)
+    peer.step(0.0)
+    assert not local.sessions.prefetch(far[0].rid, peer, 0.0)
+    assert any(r is not None and r.rid == far[0].rid
+               for r in peer.active)
+    _drain(peer)
+    _drain(local)
+    for a, b in zip(ref, far):
+        assert a.output == b.output

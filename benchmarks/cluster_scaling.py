@@ -25,8 +25,8 @@ from typing import List, Sequence, Tuple
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-from common import (Row, bench_parser, print_rows, request_graph,
-                    write_bench_json)
+from common import (Row, add_topology_flag, bench_parser, print_rows,
+                    request_graph, topology_preset, write_bench_json)
 from repro.core.monitor import MonitorConfig
 from repro.serving.cluster import TesseraCluster
 from repro.serving.router import JSEDRouter, RoundRobinRouter
@@ -51,23 +51,34 @@ REPLICA_COUNTS = (1, 2, 4, 8)           # x2 devices each -> up to 16
 
 
 def build_cluster(mix: Sequence[Tuple[str, str]], n_replicas: int,
-                  anneal: int = 800) -> TesseraCluster:
+                  anneal: int = 800,
+                  topology: str = None) -> TesseraCluster:
     groups = [list(mix[i % len(mix)]) for i in range(n_replicas)]
     g = request_graph(ARCH, prompt=BASE_PROMPT, n_out=BASE_OUT,
                       layers=LAYERS)
+    bw_overrides = None
+    if topology is not None:
+        # kernel placement sees the fabric: each group plans against
+        # its island's CONTENDED bandwidth, not the nameplate rate
+        from repro.serving.fabric import Topology
+        topo = Topology.from_dict(topology_preset(topology, n_replicas))
+        bw_overrides = [topo.planner_bw(i) for i in range(n_replicas)]
     return TesseraCluster(g, groups, base_prompt=BASE_PROMPT,
                           base_output=BASE_OUT,
                           monitor_cfg=MonitorConfig(window=0.050),
-                          anneal_iters=anneal)
+                          anneal_iters=anneal,
+                          bw_overrides=bw_overrides)
 
 
 def run_mix(mix_name: str, mix, trace_kind: str = "poisson",
-            load: float = 1.1, quick: bool = False) -> List[Row]:
+            load: float = 1.1, quick: bool = False,
+            topology: str = None) -> List[Row]:
     rows: List[Row] = []
     n_req = 150 if quick else N_REQ
     counts = REPLICA_COUNTS[:2] if quick else REPLICA_COUNTS
     for n_rep in counts:
-        cluster = build_cluster(mix, n_rep, 300 if quick else 800)
+        cluster = build_cluster(mix, n_rep, 300 if quick else 800,
+                                topology=topology)
         rate = load * cluster.capacity
         trace = assign_slos(
             make_trace(trace_kind, rate, n_req, seed=17),
@@ -96,22 +107,27 @@ def run_mix(mix_name: str, mix, trace_kind: str = "poisson",
     return rows
 
 
-def cluster_scaling(quick: bool = False) -> List[Row]:
+def cluster_scaling(quick: bool = False,
+                    topology: str = None) -> List[Row]:
     rows: List[Row] = []
     for mix_name, mix in MIXES.items():
-        rows += run_mix(mix_name, mix, "poisson", quick=quick)
+        rows += run_mix(mix_name, mix, "poisson", quick=quick,
+                        topology=topology)
     # burstiness stresses the router + monitor on the most hetero mix
     rows += run_mix("paper-pairs", MIXES["paper-pairs"], "bursty",
-                    quick=quick)
+                    quick=quick, topology=topology)
     return rows
 
 
 def main() -> None:
-    args = bench_parser("cluster throughput/cost-eff scaling").parse_args()
-    rows = cluster_scaling(args.quick)
+    ap = bench_parser("cluster throughput/cost-eff scaling")
+    add_topology_flag(ap)
+    args = ap.parse_args()
+    rows = cluster_scaling(args.quick, topology=args.topology)
     print_rows(rows)
     write_bench_json(args.out, {
         "bench": "cluster_scaling", "quick": args.quick,
+        "topology": args.topology,
         "rows": [{"name": n, "us_per_call": us, "derived": d}
                  for n, us, d in rows]})
 

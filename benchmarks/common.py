@@ -59,6 +59,59 @@ def bench_parser(description: str = "",
     return ap
 
 
+# --------------------------------------------------------------------- #
+# Shared fabric-topology presets (serving.fabric).  Benches opt in with
+# ``add_topology_flag(ap)`` + ``topology_preset(args.topology, n)`` and
+# pass the dict as ``DeploymentSpec(fabric=...)``.
+# --------------------------------------------------------------------- #
+TOPOLOGY_PRESETS = ("mirror", "congested-crossing")
+
+
+def add_topology_flag(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--topology", default=None, choices=TOPOLOGY_PRESETS,
+                    metavar="PRESET",
+                    help="route KV/bulk traffic over a shared-channel "
+                         "fabric preset: 'mirror' (per-group islands, "
+                         "fat point-to-point crossings at the legacy "
+                         "Interconnect rates) or 'congested-crossing' "
+                         "(group 0 alone on one island, the rest behind "
+                         "a thin half-duplex crossing)")
+
+
+def topology_preset(name: Optional[str], n_groups: int) -> Optional[Dict]:
+    """``DeploymentSpec.fabric`` dict for a named preset over
+    ``n_groups`` replica groups (None passes through)."""
+    if name is None:
+        return None
+    if name == "mirror":
+        # one island per group; every ordered pair gets its own
+        # full-duplex crossing at the legacy Interconnect defaults
+        # (100 GB/s, 20 us) — uncontended, so queueing only appears
+        # when transfers actually overlap on one directed edge
+        islands = [{"name": f"g{i}", "groups": [i]}
+                   for i in range(n_groups)]
+        crossings = [{"src": f"g{i}", "dst": f"g{j}",
+                      "bw": 100e9, "latency": 20e-6}
+                     for i in range(n_groups) for j in range(n_groups)
+                     if i != j]
+        return {"islands": islands, "crossings": crossings,
+                "host_island": "g0", "scheduler": "priority"}
+    if name == "congested-crossing":
+        # group 0 (the prefill-ish island) alone; every other group
+        # shares one island behind a single thin HALF-duplex crossing,
+        # so KV handoffs, checkpoint ships and migrations all fight
+        # for the same wire in both directions
+        islands = [{"name": "pre", "groups": [0]},
+                   {"name": "dec",
+                    "groups": list(range(1, n_groups))}]
+        crossings = [{"src": "pre", "dst": "dec",
+                      "bw": 10e9, "latency": 50e-6, "duplex": "half"}]
+        return {"islands": islands, "crossings": crossings,
+                "host_island": "pre", "scheduler": "priority"}
+    raise ValueError(f"unknown topology preset {name!r}; "
+                     f"pick from {TOPOLOGY_PRESETS}")
+
+
 @contextlib.contextmanager
 def maybe_profile(enabled: bool) -> Iterator[None]:
     """``with maybe_profile(args.profile): ...`` around the measured

@@ -65,6 +65,14 @@ class Plan:
     def unpipelined_latency(self) -> float:
         return sum(self.T) + sum(self.M)
 
+    def cut_seconds(self, bw: float) -> float:
+        """Per-request seconds this plan's cut bytes occupy a channel
+        of ``bw`` bytes/s — how much shared-fabric capacity the kernel
+        placement itself demands.  The quantity a contended topology
+        scores placements against (see ``serving.fabric.Topology
+        .planner_bw``)."""
+        return self.cut_bytes / max(bw, 1e-12)
+
     def device_of(self, node: int) -> int:
         return self.labels[node]
 
@@ -76,6 +84,17 @@ class Plan:
         return (f"Plan[{self.policy}] obj={self.objective * 1e3:.3f}ms "
                 f"stages={len(self.stages)} cut={self.cut_bytes / 1e6:.2f}MB"
                 f"/{self.cut_edges}e placement={per_dev}")
+
+
+def contended_bw(bw: float, sharers: int) -> float:
+    """Effective per-tenant bandwidth of a shared fabric channel: the
+    channel's rate split evenly across its co-resident tenants (the
+    fair-share steady state of the priority scheduler when every
+    tenant keeps the channel busy).  The derating a topology applies
+    before handing the planner a ``bw_override`` — kernel placement
+    then balances cut bytes against the bandwidth a group will
+    actually see, not the island's nameplate rate."""
+    return bw / max(int(sharers), 1)
 
 
 # --------------------------------------------------------------------- #

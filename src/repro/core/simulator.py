@@ -986,6 +986,13 @@ class ClusterResult:
     #                                     pressure
     kv_evictions: int = 0               # resident sessions evicted (LRU)
     peak_kv_blocks: Tuple[int, ...] = ()    # per-group peak block use
+    # contended-fabric extras (zero without a ``fabric=`` topology)
+    fabric_wait_seconds: float = 0.0    # urgent KV queueing behind other
+    #                                     traffic on shared channels
+    fabric_bulk_bytes: float = 0.0      # completed bulk-class bytes
+    fabric_bulk_seconds: float = 0.0    # channel seconds bulk occupied
+    ckpt_shipped: int = 0               # checkpoint snapshots that fully
+    #                                     crossed to the host store
 
     @property
     def throughput(self) -> float:
@@ -1062,10 +1069,19 @@ def simulate_cluster(replicas: Sequence[ReplicaModel],
 #: (dst_replica, rid, KV_TRANSFER, src_replica, t_start, t_end).
 KV_TRANSFER = 2
 
+#: event-log kind for a bulk fabric transfer (checkpoint ship, session
+#: migration); the tuple is (dst_group_or_-1_for_host, rid, FABRIC_BULK,
+#: src_group, t_start, t_end).  Only emitted with ``fabric=`` set.
+FABRIC_BULK = 3
+
+#: pseudo destination group for the host-side checkpoint store
+#: (mirrors serving.fabric.HOST; core cannot import serving).
+FABRIC_HOST = -1
+
 
 def _stream_kv(ic: Interconnect, nbytes: float, src: int, dst: int,
-               pre_start: float, pre_fin: float, chunks: int
-               ) -> Tuple[float, List[Tuple[float, float]], float]:
+               pre_start: float, pre_fin: float, chunks: int,
+               chan=None) -> Tuple[float, List[Tuple[float, float]], float]:
     """KV-arrival time of a (possibly chunked) prefill→decode handoff.
 
     Returns ``(kv_at, fabric_events, fabric_busy_seconds)``.
@@ -1085,7 +1101,17 @@ def _stream_kv(ic: Interconnect, nbytes: float, src: int, dst: int,
     it falls back to the serial schedule whenever chunking would lose —
     streamed ``kv_at`` is therefore NEVER later than the serial edge
     (property-tested).
+
+    With ``chan`` (a fabric :class:`~repro.serving.fabric.ChannelState`)
+    the transfer is *channel-queued*: bandwidth/latency come from the
+    shared channel, no attempt starts before the channel's urgent head,
+    and the chosen schedule is committed to the channel so later
+    transfers (and bulk traffic) pay for it.  The never-later property
+    then holds against the serial edge *on the same loaded channel*.
+    ``chan=None`` keeps the historical point-to-point math bit-exact.
     """
+    if chan is not None:
+        return _stream_kv_chan(chan, nbytes, pre_start, pre_fin, chunks)
     serial_dur = ic.transfer_time(nbytes, src, dst)
     serial = (pre_fin + serial_dur, [(pre_fin, pre_fin + serial_dur)],
               serial_dur)
@@ -1105,10 +1131,44 @@ def _stream_kv(ic: Interconnect, nbytes: float, src: int, dst: int,
     return serial
 
 
+def _stream_kv_chan(chan, nbytes: float, pre_start: float, pre_fin: float,
+                    chunks: int
+                    ) -> Tuple[float, List[Tuple[float, float]], float]:
+    """Channel-queued :func:`_stream_kv`: same chunk logic, but every
+    attempt also waits for the shared channel's urgent head, and the
+    winning schedule is committed so the contention is visible to every
+    later transfer on the channel."""
+    if nbytes <= 0.0:
+        return pre_fin, [(pre_fin, pre_fin)], 0.0
+    uf0 = chan.head()
+    serial_dur = chan.duration(nbytes)
+    serial_s = max(pre_fin, uf0)
+    serial = (serial_s + serial_dur,
+              [(serial_s, serial_s + serial_dur)], serial_dur)
+    span = pre_fin - pre_start
+    if chunks <= 1 or span <= 0.0:
+        chan.commit_urgent(serial[1], pre_fin, nbytes)
+        return serial
+    per = chan.latency + (nbytes / chunks) / chan.bw
+    done = max(pre_start, uf0)
+    evs: List[Tuple[float, float]] = []
+    for c in range(1, chunks + 1):
+        ready = pre_start + span * c / chunks
+        s = max(ready, done)
+        done = s + per
+        evs.append((s, done))
+    if done <= serial[0]:
+        chan.commit_urgent(evs, pre_start + span / chunks, nbytes)
+        return done, evs, per * chunks
+    chan.commit_urgent(serial[1], pre_fin, nbytes)
+    return serial
+
+
 def _stream_kv_flaky(ic: Interconnect, nbytes: float, src: int, dst: int,
-                     pre_start: float, pre_fin: float, chunks: int, link
-                     ) -> Tuple[Optional[float],
-                                List[Tuple[float, float]], float, int]:
+                     pre_start: float, pre_fin: float, chunks: int, link,
+                     chan=None) -> Tuple[Optional[float],
+                                         List[Tuple[float, float]], float,
+                                         int]:
     """Fault-injected variant of :func:`_stream_kv`.
 
     ``link`` (see serving/faults.FaultState.link) carries the per-link
@@ -1125,21 +1185,38 @@ def _stream_kv_flaky(ic: Interconnect, nbytes: float, src: int, dst: int,
     With zero failure draws the schedule — including the never-later
     serial fallback — is bit-identical to :func:`_stream_kv`, and a
     fault-free transfer never aborts regardless of the deadline.
+
+    With ``chan`` the transfer is channel-queued exactly as in
+    :func:`_stream_kv_chan`: attempts (including failed ones — the
+    bytes moved, the checksum did not) wait for and occupy the shared
+    channel, and whatever schedule results is committed to it.
     """
     if nbytes <= 0.0 or src == dst:
         kv_at, evs, busy = _stream_kv(ic, nbytes, src, dst, pre_start,
-                                      pre_fin, chunks)
+                                      pre_fin, chunks, chan)
         return kv_at, evs, busy, 0
     span = pre_fin - pre_start
     streamed = chunks > 1 and span > 0.0
     n = chunks if streamed else 1
-    if streamed:
+    if chan is not None:
+        per = chan.latency + (nbytes / n) / chan.bw
+    elif streamed:
         per = ic.base_latency + (nbytes / n) / ic.bandwidth(src, dst)
     else:
         per = ic.transfer_time(nbytes, src, dst)
     deadline = pre_fin + link.deadline
     rng = link.rng
     done = pre_start if streamed else pre_fin
+    uf0 = 0.0
+    if chan is not None:
+        uf0 = chan.head()
+        done = max(done, uf0)
+    r0 = pre_start + span / n if streamed else pre_fin
+
+    def _commit(spans: List[Tuple[float, float]]) -> None:
+        if chan is not None and spans:
+            chan.commit_urgent(spans, r0, nbytes)
+
     evs: List[Tuple[float, float]] = []
     busy = 0.0
     retries = 0
@@ -1150,6 +1227,7 @@ def _stream_kv_flaky(ic: Interconnect, nbytes: float, src: int, dst: int,
         attempt = 0
         while True:
             if failed_any and s + per > deadline:
+                _commit(evs)
                 return None, evs, busy, retries
             end = s + per
             evs.append((s, end))
@@ -1161,13 +1239,22 @@ def _stream_kv_flaky(ic: Interconnect, nbytes: float, src: int, dst: int,
             retries += 1
             attempt += 1
             if attempt > link.max_retries:
+                _commit(evs)
                 return None, evs, busy, retries
             s = end + link.backoff * (2.0 ** (attempt - 1))
     if not failed_any and streamed:
-        serial_dur = ic.transfer_time(nbytes, src, dst)
-        if done > pre_fin + serial_dur:
-            return (pre_fin + serial_dur,
-                    [(pre_fin, pre_fin + serial_dur)], serial_dur, 0)
+        if chan is not None:
+            serial_dur = chan.duration(nbytes)
+            serial_s = max(pre_fin, uf0)
+        else:
+            serial_dur = ic.transfer_time(nbytes, src, dst)
+            serial_s = pre_fin
+        if done > serial_s + serial_dur:
+            serial_evs = [(serial_s, serial_s + serial_dur)]
+            if chan is not None:
+                chan.commit_urgent(serial_evs, pre_fin, nbytes)
+            return serial_s + serial_dur, serial_evs, serial_dur, 0
+    _commit(evs)
     return done, evs, busy, retries
 
 
@@ -1327,6 +1414,13 @@ class ControlSignals:
     # per-group KV-block utilization at ``now`` (empty without a
     # ``kv=`` occupancy model — the default keeps old callers intact)
     kv_util: Tuple[float, ...] = ()
+    # per-group service-time accounting over the epoch: ``service_obs``
+    # sums the service seconds the DES committed (including any straggle
+    # inflation), ``service_model`` the same work priced by the group's
+    # un-degraded profile.  Their ratio is the observable a straggle
+    # detector thresholds on.  Empty tuples for old callers.
+    service_obs: Tuple[float, ...] = ()
+    service_model: Tuple[float, ...] = ()
 
 
 # --------------------------------------------------------------------- #
@@ -1507,7 +1601,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                         start_ineligible: Sequence[int] = (),
                         events: Optional[str] = "full",
                         kv: Optional[KvPoolModel] = None,
-                        faults=None) -> ClusterResult:
+                        faults=None,
+                        fabric=None) -> ClusterResult:
     """One DES entry point behind every serving surface.
 
     Subsumes :func:`simulate_cluster` (colocated routing) and
@@ -1569,9 +1664,20 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
     ``dropped``); ``faults.health`` observes transfer errors and
     eligibility flips (circuit breakers for health-aware routers).
 
+    ``fabric`` (a ``serving.fabric.Topology``) replaces the
+    point-to-point ``interconnect`` math for cross-group movement: KV
+    handoffs become channel-queued urgent traffic on shared
+    island/crossing channels, checkpoint ships (with
+    ``faults.recovery``) and session migrations become preemptible
+    bulk traffic on the SAME channels (``FABRIC_BULK`` events), and
+    crash-replay progress counts checkpoints by their actual channel
+    completion time instead of the unloaded periodic formula.
+    Strictly opt-in: ``fabric=None`` runs are bit-identical to
+    pre-fabric builds.
+
     Deterministic: identical (trace, plans, router, timeline,
-    controller config, fault plan seed) produce a bit-identical event
-    log.
+    controller config, fault plan seed, fabric topology) produce a
+    bit-identical event log.
     """
     if events not in ("full", "agg", None):
         raise ValueError(f"events must be 'full', 'agg' or None, "
@@ -1636,6 +1742,56 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             rep.kv_util_fn = (lambda t, g=gi: kvm.util_at(g, t))
         elif hasattr(rep, "kv_util_fn"):
             del rep.kv_util_fn
+    # Contended fabric (strictly opt-in): bind the topology, point its
+    # bulk-slice sink at whichever event record this run keeps, and let
+    # a fabric-aware router charge queued transfer tails.
+    fab = fabric.bind(len(replicas)) if fabric is not None else None
+    if fab is not None:
+        if ev_log is not None:
+            def _bulk_sink(src, dst, rid, t0, t1,
+                           _log=ev_log):
+                _log.append((dst, rid, FABRIC_BULK, src, t0, t1))
+        elif agg is not None:
+            def _bulk_sink(src, dst, rid, t0, t1, _agg=agg):
+                _agg.add(dst, FABRIC_BULK, src, t0, t1)
+        else:
+            def _bulk_sink(src, dst, rid, t0, t1):
+                return None
+        fab.sink = _bulk_sink
+        if hasattr(route_fn, "bind_fabric"):
+            route_fn.bind_fabric(fab)
+    # Monotone tag source for bulk transfers (a crash victim's replay
+    # must not collide with its first attempt's checkpoint tags).
+    ship_seq = [0]
+
+    def ship(i: int, g: int, d0: float, d1: float, kvb: float):
+        """Enqueue this request's periodic checkpoint snapshots as
+        bulk fabric traffic g -> host; returns the (group, seq, count)
+        record crash recovery later counts completions against."""
+        if fab is None or recovery is None:
+            return None
+        if d1 <= d0 or kvb <= 0.0:
+            return None
+        n_ship = int((d1 - d0) / recovery.interval)
+        if n_ship <= 0:
+            return None
+        seq = ship_seq[0]
+        ship_seq[0] += 1
+        for k in range(1, n_ship + 1):
+            fab.enqueue_bulk(g, FABRIC_HOST, trace[i].rid, kvb,
+                             d0 + k * recovery.interval,
+                             ("ckpt", seq, k))
+        return (g, seq, n_ship)
+
+    # Per-group service-seconds committed this control epoch: observed
+    # (straggle-inflated) vs the un-degraded profile's price for the
+    # same work.  Only maintained under a controller.
+    svc_obs = [0.0] * len(replicas)
+    svc_model = [0.0] * len(replicas)
+
+    def note_service(rep: ReplicaModel, obs: float) -> None:
+        svc_obs[rep.idx] += obs
+        svc_model[rep.idx] += obs / rep.slow if rep.slow != 1.0 else obs
 
     def dispatch(i: int, req: ClusterRequest, now: float,
                  arrival0: float, fresh: bool) -> None:
@@ -1650,6 +1806,19 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         else:
             p_idx, d_idx, admit_at = decision
             admit_at = max(admit_at, req.arrival)
+            if fab is not None:
+                # A fabric-aware router that broke session affinity
+                # flags the abandoned home so the resident state's
+                # migration rides the fabric as bulk traffic.
+                mig = getattr(route_fn, "pending_migration", None)
+                if mig is not None:
+                    route_fn.pending_migration = None
+                    if mig != d_idx and req.kv_bytes > 0.0:
+                        mseq = ship_seq[0]
+                        ship_seq[0] += 1
+                        fab.enqueue_bulk(mig, d_idx, req.rid,
+                                         req.kv_bytes, now,
+                                         ("mig", mseq))
         if kvm is not None:
             if req.session is not None and p_idx == d_idx:
                 # follow-up turn landing on its resident group: the
@@ -1673,6 +1842,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             finish, first_tok, _ = rep._run_units(req, ev_log, "both",
                                                   admit_at, agg)
             ttft_abs, kv_at = first_tok, None
+            if track:
+                note_service(rep, rep.predicted_service(req))
             if rep.monitor is not None:
                 rep.monitor.record_request(
                     finish, finish - req.arrival,
@@ -1683,16 +1854,20 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             pre_fin, _, pre_start = pre._run_units(req, ev_log,
                                                    "prefill", admit_at,
                                                    agg)
+            if track:
+                note_service(pre,
+                             pre.predicted_phase_service(req, "prefill"))
             link = fstate.link(p_idx, d_idx) if fstate is not None \
                 else None
+            chan = fab.channel(p_idx, d_idx) if fab is not None else None
             if link is None:
                 kv_at, xfer_evs, busy = _stream_kv(
                     ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
-                    kv_chunks)
+                    kv_chunks, chan)
             else:
                 kv_at, xfer_evs, busy, nretry = _stream_kv_flaky(
                     ic, req.kv_bytes, p_idx, d_idx, pre_start, pre_fin,
-                    kv_chunks, link)
+                    kv_chunks, link, chan)
                 counters["kv_retries"] += nretry
                 if health is not None:
                     for _ in range(nretry):
@@ -1719,16 +1894,23 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                                                       "both", t_abort,
                                                       agg)
                 ttft_abs = first_tok
+                if track:
+                    note_service(dec, dec.predicted_service(req))
                 if kvm is not None:
                     kvm.release(d_idx, req, finish)
                 records[i] = {"served": True, "p": p_idx, "d": d_idx,
                               "finish": finish, "kv_at": None,
                               "kv_i": None, "d0": first_tok,
                               "lat": finish - arrival0,
-                              "ttft": ttft_abs - arrival0}
+                              "ttft": ttft_abs - arrival0,
+                              "ship": ship(i, d_idx, first_tok, finish,
+                                           req.kv_bytes)}
                 return
             finish, _, _ = dec._run_units(req, ev_log, "decode", kv_at,
                                           agg)
+            if track:
+                note_service(dec,
+                             dec.predicted_phase_service(req, "decode"))
             # first token streams from the decode group once the state
             # lands there — transfer time is part of TTFT
             ttft_abs = kv_at
@@ -1754,14 +1936,17 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                     dec.predicted_phase_service(req, "decode"))
         if kvm is not None:
             kvm.release(d_idx, req, finish)
+        d0_anchor = ttft_abs if kv_at is None else kv_at
         records[i] = {"served": True, "p": p_idx, "d": d_idx,
                       "finish": finish, "kv_at": kv_at,
                       "kv_i": kv_i,
                       # decode-start anchor checkpoint recovery
                       # measures replay progress from
-                      "d0": ttft_abs if kv_at is None else kv_at,
+                      "d0": d0_anchor,
                       "lat": finish - arrival0,
-                      "ttft": ttft_abs - arrival0}
+                      "ttft": ttft_abs - arrival0,
+                      "ship": ship(i, d_idx, d0_anchor, finish,
+                                   req.kv_bytes)}
 
     def redispatch(i: int, req: ClusterRequest, arrival0: float,
                    keep_ttft: Optional[float]) -> None:
@@ -1845,7 +2030,13 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                 keep_ttft = None
                 d0, d1 = rec["d0"], rec["finish"]
                 if rec["d"] == e.group and e.time > d0 and d1 > d0:
-                    k = math.floor((e.time - d0) / recovery.interval)
+                    if fab is not None:
+                        # checkpoints only count once their snapshot
+                        # fully crossed the (possibly contended)
+                        # fabric to the host store
+                        k = fab.ships_done(rec.get("ship"), e.time)
+                    else:
+                        k = math.floor((e.time - d0) / recovery.interval)
                     frac = min(k * recovery.interval / (d1 - d0), 1.0)
                     if frac > 0.0:
                         restore = (recovery.base_latency
@@ -1859,6 +2050,11 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                         keep_ttft = rec["ttft"]
                         counters["recovered"] += 1
                 redispatch(i, vic, trace[i].arrival, keep_ttft)
+            if fab is not None:
+                # the dead group's memory is gone: whatever it had not
+                # finished shipping will never ship (slices already on
+                # the wire stay — that bandwidth was genuinely spent)
+                fab.cancel_src(e.group, e.time)
 
     # ------------------------------------------------------------- #
     # closed-loop control: every `interval` seconds of simulated time
@@ -1889,8 +2085,13 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             queue_len=tuple(r.queue_len(te) for r in replicas),
             util=tuple(util),
             eligible=tuple(r.eligible for r in replicas),
-            kv_util=(kvm.util_vec(te) if kvm is not None else ()))
+            kv_util=(kvm.util_vec(te) if kvm is not None else ()),
+            service_obs=tuple(svc_obs),
+            service_model=tuple(svc_model))
         ctl_counts.update(arrivals=0, shed=0, miss=0)
+        for gi in range(len(replicas)):
+            svc_obs[gi] = 0.0
+            svc_model[gi] = 0.0
         for ev in (controller.decide(sig) or ()):
             if ev.time < te:
                 raise ValueError(f"controller event {ev} is in the "
@@ -1903,6 +2104,11 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
                 fire_epoch(next_epoch)
                 next_epoch += ctl_dt
         apply_events(req.arrival)
+        if fab is not None:
+            # Every future urgent booking has ready >= this arrival
+            # (dispatch order), so the arrival is a safe watermark to
+            # drain pending bulk below.
+            fab.materialize(req.arrival)
         dispatch(i, req, req.arrival, req.arrival, fresh=True)
         if controller is not None:
             ctl_counts["arrivals"] += 1
@@ -1912,6 +2118,8 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
             elif not _meets_slo(req, rec["lat"], rec["ttft"]):
                 ctl_counts["miss"] += 1
     apply_events(math.inf)          # events after the last arrival
+    if fab is not None:
+        fab.flush()                 # drain every remaining bulk ship
     # victims still parked when the trace ends never found capacity
     counters["dropped"] += len(parked)
 
@@ -1958,7 +2166,14 @@ def simulate_deployment(replicas: Sequence[ReplicaModel],
         kv_hit_tokens=kvm.hit_tokens if kvm is not None else 0.0,
         kv_delayed=kvm.delayed if kvm is not None else 0,
         kv_evictions=kvm.evictions if kvm is not None else 0,
-        peak_kv_blocks=kvm.peaks() if kvm is not None else ())
+        peak_kv_blocks=kvm.peaks() if kvm is not None else (),
+        fabric_wait_seconds=(fab.stats()["wait_seconds"]
+                             if fab is not None else 0.0),
+        fabric_bulk_bytes=(fab.stats()["bulk_bytes"]
+                           if fab is not None else 0.0),
+        fabric_bulk_seconds=(fab.stats()["bulk_seconds"]
+                             if fab is not None else 0.0),
+        ckpt_shipped=fab.ckpt_completed() if fab is not None else 0)
 
 
 def _peak_concurrent(intervals: Sequence[Tuple[float, float, float]]

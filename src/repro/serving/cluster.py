@@ -94,6 +94,7 @@ class TesseraCluster:
                  monitor_cfg: Optional[MonitorConfig] = MonitorConfig(),
                  initial_policy: str = "latency",
                  bw_override: Optional[float] = None,
+                 bw_overrides: Optional[Sequence[Optional[float]]] = None,
                  anneal_iters: int = 1000,
                  model_cfg: Optional[ModelConfig] = None,
                  interconnect: Optional[Interconnect] = None):
@@ -108,6 +109,12 @@ class TesseraCluster:
         self.interconnect = interconnect or Interconnect()
         self.policies = tuple(policies)
         self.bw_override = bw_override
+        # per-group planner bandwidth (index-aligned with the founding
+        # groups; e.g. a fabric topology's contended island bandwidth).
+        # Groups past the list — autoscaled additions — fall back to
+        # the scalar ``bw_override``.
+        self.bw_overrides = (list(bw_overrides)
+                             if bw_overrides is not None else None)
         self.anneal_iters = anneal_iters
         self.groups: List[ReplicaGroup] = []
         self.add_groups(replica_devices)
@@ -120,17 +127,21 @@ class TesseraCluster:
         new: List[ReplicaGroup] = []
         for group in replica_devices:
             devices = resolve_devices(group)
+            gi = len(self.groups)
+            ov = self.bw_override
+            if self.bw_overrides is not None and gi < len(self.bw_overrides):
+                if self.bw_overrides[gi] is not None:
+                    ov = self.bw_overrides[gi]
             # Identical device sets hit the planner's plan cache, so a
             # 16-device cluster of 8 identical pairs solves each policy
             # once — the same path monitor-triggered re-planning takes.
             plans = {pol: planner.plan(self.graph, devices, policy=pol,
-                                       bw_override=self.bw_override,
+                                       bw_override=ov,
                                        anneal_iters=self.anneal_iters)
                      for pol in self.policies}
-            units = {pol: replica_units(self.graph, plan, devices,
-                                        self.bw_override)
+            units = {pol: replica_units(self.graph, plan, devices, ov)
                      for pol, plan in plans.items()}
-            g = ReplicaGroup(len(self.groups), devices, plans, units)
+            g = ReplicaGroup(gi, devices, plans, units)
             self.groups.append(g)
             new.append(g)
         return new

@@ -55,7 +55,8 @@ from repro.serving.kvpool import KvSlice, SessionState, kv_checksum
 
 __all__ = ["Crash", "Straggle", "FlakyLink", "FaultPlan", "FaultState",
            "RecoveryConfig", "BreakerConfig", "GroupHealth",
-           "DeviceHealth", "ChaosLink", "CheckpointStore"]
+           "DeviceHealth", "ChaosLink", "CheckpointStore",
+           "StraggleDetector"]
 
 
 # ===================================================================== #
@@ -444,6 +445,19 @@ class GroupHealth:
         self._state[g] = "half_open"
         self._rate[g] *= 0.5
 
+    def suspect(self, g: int, t: float) -> None:
+        """Soft evidence of degradation with NO observed error (e.g. a
+        straggle detector's inference from service-time drift):
+        half-open the breaker so routers penalize the group and probe
+        it, without latching.  A later :meth:`record_ok` closes it; a
+        hard :meth:`trip` still overrides.  No-op while already
+        open."""
+        self._tick(g, t)
+        if self._latched[g] or self._state[g] == "open":
+            return
+        self._state[g] = "half_open"
+        self._rate[g] = max(self._rate[g], self.cfg.open_threshold)
+
     # -- router-facing probes -------------------------------------- #
     def state(self, g: int, t: float) -> str:
         self._tick(g, t)
@@ -491,6 +505,93 @@ class DeviceHealth:
 
     def lost(self) -> set:
         return {i for i, a in enumerate(self.alive) if not a}
+
+
+# ===================================================================== #
+# Straggle detection: infer degradation nobody declared
+# ===================================================================== #
+class StraggleDetector:
+    """Infers straggling groups from windowed DES signals and trips
+    their :class:`GroupHealth` breakers to half-open — no injected
+    fault required.
+
+    Plugs into ``Deployment.simulate(controller=...)`` (the
+    decision-epoch protocol): each epoch's :class:`ControlSignals`
+    carries ``service_obs`` (service seconds the DES committed per
+    group, straggle inflation included) and ``service_model`` (the
+    same work priced by the group's un-degraded profile).  Their ratio
+    is EWMA-smoothed per group; after ``min_epochs`` epochs with
+    committed work, a ratio at or above ``threshold`` calls
+    ``health.suspect`` (half-open: routers penalize and probe), and a
+    flagged group whose smoothed ratio falls back to ``clear`` earns a
+    ``health.record_ok`` (probe success: breaker closes).
+
+    A healthy group's ratio is exactly 1.0 — the DES prices committed
+    work with the same linear program the model uses — so false
+    positives require an actual profile/behavior divergence, not
+    noise.  Detections are recorded in ``self.detections`` as
+    ``(time, group, smoothed_ratio)``.
+    """
+
+    def __init__(self, health: GroupHealth, *,
+                 interval: float = 0.5,
+                 threshold: float = 1.25,
+                 clear: float = 1.05,
+                 alpha: float = 0.5,
+                 min_epochs: int = 2,
+                 min_service: float = 1e-6):
+        if interval <= 0.0:
+            raise ValueError("interval must be > 0")
+        if threshold <= clear:
+            raise ValueError("threshold must exceed clear "
+                             "(hysteresis band)")
+        self.health = health
+        self.interval = float(interval)
+        self.threshold = float(threshold)
+        self.clear = float(clear)
+        self.alpha = float(alpha)
+        self.min_epochs = int(min_epochs)
+        self.min_service = float(min_service)
+        self.detections: List[Tuple[float, int, float]] = []
+        self._ewma: Dict[int, float] = {}
+        self._epochs: Dict[int, int] = {}
+        self.flagged: set = set()
+
+    # controller protocol ------------------------------------------- #
+    def bind(self, deployment) -> "StraggleDetector":
+        return self
+
+    def begin(self, t0: float) -> None:
+        self._ewma.clear()
+        self._epochs.clear()
+        self.flagged.clear()
+        self.detections = []
+
+    def decide(self, sig):
+        obs, mod = sig.service_obs, sig.service_model
+        for g in range(len(obs)):
+            if mod[g] <= self.min_service:
+                continue                # no committed work this epoch
+            ratio = obs[g] / mod[g]
+            prev = self._ewma.get(g)
+            ew = ratio if prev is None else \
+                (1.0 - self.alpha) * prev + self.alpha * ratio
+            self._ewma[g] = ew
+            self._epochs[g] = self._epochs.get(g, 0) + 1
+            if self._epochs[g] < self.min_epochs:
+                continue
+            if ew >= self.threshold:
+                if g not in self.flagged:
+                    self.flagged.add(g)
+                    self.detections.append((sig.now, g, ew))
+                self.health.suspect(g, sig.now)
+            elif g in self.flagged and ew <= self.clear:
+                self.flagged.discard(g)
+                self.health.record_ok(g, sig.now)
+        return ()
+
+    def finish(self, t_end: float) -> None:
+        return None
 
 
 # ===================================================================== #
@@ -566,12 +667,15 @@ class CheckpointStore:
     def __contains__(self, rid: int) -> bool:
         return rid in self._data
 
-    def poll(self, engines, now: float) -> int:
+    def poll(self, engines, now: float, on_store=None) -> int:
+        """``on_store(engine_idx, nbytes)`` (optional) observes every
+        stored snapshot — the hook live fabric accounting uses to
+        charge checkpoint shipping as bulk traffic."""
         if self._next_t is not None and now < self._next_t:
             return 0
         self._next_t = now + self.cfg.interval
         n = 0
-        for eng in engines:
+        for gi, eng in enumerate(engines):
             sessions = eng.sessions if hasattr(eng, "sessions") else eng
             for req, st in sessions.snapshot(now):
                 prev = self._data.get(st.rid)
@@ -588,6 +692,8 @@ class CheckpointStore:
                 }
                 self.checkpoints += 1
                 self.stored_bytes += float(st.nbytes)
+                if on_store is not None:
+                    on_store(gi, int(st.nbytes))
                 n += 1
         return n
 

@@ -82,6 +82,11 @@ class KvSlice:
     state: Any = None                   # batch-1 layer-1 pytree
     nbytes: int = 0
     checksum: Optional[int] = None      # producer-side kv_checksum
+    # fabric priority class (serving.fabric.URGENT / .BULK): decode-
+    # blocking handoffs travel URGENT; checkpoint/migration shards
+    # travel BULK.  Defaults URGENT so pre-fabric producers and the
+    # legacy wire format stay unchanged.
+    klass: int = 0
 
     def verify(self) -> bool:
         """True when no checksum travelled or it matches the state."""
@@ -545,7 +550,8 @@ class SessionManager:
 
     def stream(self, req, now: Optional[float] = None,
                chunk_size: Optional[int] = None,
-               checksum: bool = False) -> Iterator[Any]:
+               checksum: bool = False,
+               klass: int = 0) -> Iterator[Any]:
         """Pipelined :meth:`prefill`: yield :class:`KvSlice` shards
         the moment each (layer, chunk) is computed, then the
         :class:`SessionState` cursor as the FINAL item (its ``nbytes``
@@ -555,7 +561,11 @@ class SessionManager:
         remaining prefill compute.  ``checksum=True`` stamps each
         shard with :func:`kv_checksum` (a host-side read per shard —
         off by default; the chaos-injection path turns it on) so the
-        receiver can detect in-flight corruption."""
+        receiver can detect in-flight corruption.  ``klass`` stamps
+        every shard with a fabric priority class (0 = URGENT decode-
+        blocking, 1 = BULK background; see serving.fabric) so a
+        transfer scheduler between producer and consumer can order
+        competing streams."""
         eng = self.eng
         from repro.serving.engine import _PAD_SAFE_FAMILIES
         assert len(req.prompt) < eng.max_len, "prompt exceeds max_len"
@@ -571,7 +581,8 @@ class SessionManager:
                            t0=t0, t1=t1, state=shard,
                            nbytes=M.kv_state_bytes(shard),
                            checksum=(kv_checksum(shard) if checksum
-                                     else None))
+                                     else None),
+                           klass=klass)
 
         if (eng._prefill_custom is None
                 and eng.cfg.sliding_window is None and C < plen):

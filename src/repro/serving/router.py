@@ -153,24 +153,54 @@ class JSEDRouter(Router):
         # router.
         self.health = health
         self.brownout_priority = brownout_priority
+        # Bound by simulate_deployment when the spec carries a fabric:
+        # a session abandoning its home then charges the QUEUED channel
+        # tail of moving its resident state into the shed estimate.
+        self._fabric = None
         self._session_home: Dict[int, int] = {}
+
+    def bind_fabric(self, fstate) -> None:
+        self._fabric = fstate
+
+    def _queued_tail(self, req, src: Optional[int], dst: int,
+                     now: float) -> float:
+        """Seconds the session-state move src->dst spends on the shared
+        fabric: committed time already ahead on the channel plus the
+        transfer at the channel rate.  0.0 without a fabric, without a
+        home, or when the move never leaves the island."""
+        fs = self._fabric
+        if fs is None or src is None or src == dst:
+            return 0.0
+        ch = fs.channel(src, dst)
+        if ch is None:
+            return 0.0
+        return max(0.0, ch.head() - now) + ch.duration(req.kv_bytes)
 
     def score(self, req: ClusterRequest, replica: ReplicaModel,
               now: float) -> float:
         return replica.backlog(now) + replica.predicted_service(req)
 
-    def _shed(self, req, replica, now) -> bool:
+    def _shed(self, req, replica, now, xfer: float = 0.0) -> bool:
         """Expected delays on the replica the request will ACTUALLY
         join (post-affinity) vs its SLO components.  Colocated expected
-        TTFT = queueing + prefill-phase service (decode follows)."""
+        TTFT = queueing + prefill-phase service (decode follows).
+        ``xfer`` is the queued fabric tail of a session migration
+        landing on this replica (0.0 keeps the math bit-identical to
+        the fabric-less router)."""
         if not self.slo_shed:
             return False
-        if req.slo is not None and self.score(req, replica, now) > req.slo:
+        s = self.score(req, replica, now)
+        if xfer:
+            s += xfer
+        if req.slo is not None and s > req.slo:
             return True
-        return (req.slo_ttft is not None
-                and replica.backlog(now)
-                + replica.predicted_phase_service(req, "prefill")
-                > req.slo_ttft)
+        if req.slo_ttft is None:
+            return False
+        t = (replica.backlog(now)
+             + replica.predicted_phase_service(req, "prefill"))
+        if xfer:
+            t += xfer
+        return t > req.slo_ttft
 
     def route(self, req, replicas, now) -> int:
         cand = eligible_indices(replicas)
@@ -209,6 +239,7 @@ class JSEDRouter(Router):
             if s < best_s:
                 best, best_s = i, s
         choice = best
+        migrate_from: Optional[int] = None
         if self.session_affinity and req.session is not None:
             home = self._session_home.get(req.session)
             if home is not None and h is not None \
@@ -230,10 +261,16 @@ class JSEDRouter(Router):
                 move_cost = replicas[best].backlog(now)
                 if stay_cost - move_cost <= self.affinity_break:
                     choice = home
+                else:
+                    # affinity break: the resident state moves across
+                    # the fabric before the new home can serve
+                    migrate_from = home
         # the SLO check runs against the replica the request will
         # ACTUALLY join — affinity must not smuggle a doomed request
-        # past admission control
-        if self._shed(req, replicas[choice], now):
+        # past admission control (a queued fabric crossing counts
+        # toward the deadline like any other delay)
+        xfer = self._queued_tail(req, migrate_from, choice, now)
+        if self._shed(req, replicas[choice], now, xfer):
             return -1
         if self.session_affinity and req.session is not None:
             self._session_home[req.session] = choice
@@ -307,6 +344,17 @@ class PDRouter(Router):
         self.interconnect = interconnect
         self.kv_chunks = max(int(kv_chunks), 1)
         self.transfers_avoided = 0
+        # Bound by simulate_deployment when the spec carries a fabric
+        # topology (serving.fabric.FabricState).  None keeps every
+        # estimate on the point-to-point interconnect math.
+        self._fabric = None
+        # Migration handshake with the DES: when an affinity break
+        # abandons a decode home, the admitted tuple decision leaves
+        # the old home here so the simulator can enqueue the resident
+        # state's move as bulk fabric traffic.  Consumed (and cleared)
+        # by simulate_deployment's dispatch.
+        self.pending_migration: Optional[int] = None
+        self._migrate_from: Optional[int] = None
         self._session_decode: Dict[int, int] = {}
         self._pools: Optional[Tuple[List[int], List[int]]] = None
         if prefill_pool is not None or decode_pool is not None:
@@ -359,13 +407,36 @@ class PDRouter(Router):
                 best, best_s = i, s
         return best
 
-    def _transfer_tail(self, req, p: int, d: int) -> float:
+    def bind_fabric(self, fstate) -> None:
+        """Called by the DES when the deployment carries a fabric:
+        shed estimates then charge the QUEUED channel tail (head-of-
+        channel wait + contended transfer) instead of the unloaded
+        point-to-point edge."""
+        self._fabric = fstate
+
+    def _transfer_tail(self, req, p: int, d: int,
+                       now: float = 0.0) -> float:
         """Expected KV-transfer seconds landing in TTFT.  Serial: the
         whole edge.  Overlapped streaming: earlier chunks hide behind
         the remaining prefill compute, so only the last chunk's
         transfer outlives it (the compute-bound best case — the DES
         can only arrive at or before the serial edge, see
-        simulator._stream_kv)."""
+        simulator._stream_kv).  With a bound fabric the estimate is
+        the QUEUED tail: time already committed ahead on the shared
+        channel plus the transfer at the channel's (possibly
+        contended) rate — so admission control sees congestion other
+        requests and bulk traffic created, not the nameplate edge."""
+        fs = self._fabric
+        if fs is not None:
+            ch = fs.channel(p, d)
+            if ch is None:          # same group / same island: free
+                return 0.0
+            queued = max(0.0, ch.head() - now)
+            serial = ch.duration(req.kv_bytes)
+            if self.kv_chunks <= 1 or serial <= 0.0:
+                return queued + serial
+            return queued + min(serial, ch.latency
+                                + (req.kv_bytes / self.kv_chunks) / ch.bw)
         ic = self.interconnect
         if ic is None:
             return 0.0
@@ -379,6 +450,8 @@ class PDRouter(Router):
     def route(self, req, replicas, now):
         """Returns (prefill_idx, decode_idx, admit_at) — or -1 (shed),
         or a plain index when the pools degenerate to one group."""
+        self.pending_migration = None       # handshake is per-decision
+        self._migrate_from = None
         pre_pool, dec_pool = self.pools(replicas)
         # masked groups (warm-up / drain / failure) drop out of their
         # pool; a pool that empties collapses onto the other (the
@@ -444,6 +517,10 @@ class PDRouter(Router):
                     self.transfers_avoided += 1
                     return home
                 drop_home = True                        # migrate
+                # the abandoned home still holds the session's resident
+                # state; if this decision admits a split, the move
+                # ships over the fabric as bulk traffic
+                self._migrate_from = home
         p = self._best(pre_pool, req, replicas, now, "prefill")
         d = self._best(dec_pool, req, replicas, now, "decode")
         if p == d:
@@ -458,7 +535,7 @@ class PDRouter(Router):
             expect_ttft = (lag + replicas[p].backlog(now)
                            + replicas[p].predicted_phase_service(
                                req, "prefill")
-                           + self._transfer_tail(req, p, d))
+                           + self._transfer_tail(req, p, d, now))
             expect = expect_ttft + replicas[d].predicted_phase_service(
                 req, "decode")
             if req.slo is not None and expect > req.slo:
@@ -467,6 +544,9 @@ class PDRouter(Router):
                 return -1
         if self.session_affinity and req.session is not None:
             self._session_decode[req.session] = d
+        # only an ADMITTED split migrates state — a shed above leaves
+        # the handshake cleared and the session where it was
+        self.pending_migration = self._migrate_from
         return p, d, now + lag
 
 

@@ -116,6 +116,9 @@ class DeploymentSpec:
     anneal_iters: int = 1000            # planner effort per group
     bw_override: Optional[float] = None
     engine: Dict[str, Any] = _field(dict)
+    # contended-fabric topology (serving.fabric.Topology dict form);
+    # None keeps the point-to-point interconnect model bit-identical
+    fabric: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -177,6 +180,12 @@ class DeploymentSpec:
         if self.initial_policy not in _POLICIES:
             raise ValueError(f"initial_policy must be one of "
                              f"{_POLICIES}, got {self.initial_policy!r}")
+        if self.fabric is not None:
+            # full validation (keys, islands, reachability) + every
+            # declared group must sit on some island
+            topo = self.make_topology()
+            for g in range(len(self.groups)):
+                topo.island_of(g)
         if self.calibration is not None:
             calibrate(self.calibration)     # raises on a bad payload
         if self.monitor:
@@ -200,6 +209,14 @@ class DeploymentSpec:
             base_latency=float(self.interconnect.get("base_latency",
                                                      20e-6)),
             bw=bw)
+
+    def make_topology(self):
+        """The contended-fabric :class:`~repro.serving.fabric.Topology`
+        (or ``None`` when the spec keeps point-to-point math)."""
+        if self.fabric is None:
+            return None
+        from repro.serving.fabric import Topology
+        return Topology.from_dict(self.fabric)
 
     def calibration_model(self) -> Optional[Calibration]:
         return (calibrate(self.calibration)
@@ -335,6 +352,14 @@ class Deployment:
             mon = (MonitorConfig(**spec.monitor)
                    if spec.monitor is not None else None)
             all_groups = list(spec.groups) + self._extra_groups
+            topo = spec.make_topology()
+            bw_overrides = None
+            if topo is not None:
+                # kernel placement sees the fabric: each group plans
+                # against its island bandwidth derated by contention
+                # (extra/autoscaled groups fall back to bw_override)
+                bw_overrides = [topo.planner_bw(g)
+                                for g in range(len(spec.groups))]
             self._cluster = TesseraCluster(
                 self.graph,
                 [self._resolved(g) for g in all_groups],
@@ -343,6 +368,7 @@ class Deployment:
                 monitor_cfg=mon,
                 initial_policy=spec.initial_policy,
                 bw_override=spec.bw_override,
+                bw_overrides=bw_overrides,
                 anneal_iters=spec.anneal_iters,
                 model_cfg=self._model_cfg(),
                 interconnect=spec.make_interconnect())
@@ -361,6 +387,9 @@ class Deployment:
             # transfer tail the DES will produce
             kw.setdefault("interconnect", self.spec.make_interconnect())
             kw.setdefault("kv_chunks", self.spec.kv_chunks)
+        # (with spec.fabric set, simulate_deployment later binds the
+        # run's FabricState into the router via router.bind_fabric, so
+        # shed estimates charge the QUEUED transfer tail)
         return make_router(self.spec.router, **kw)
 
     # ------------------------------------------------------------------ #
@@ -537,7 +566,11 @@ class Deployment:
         ``GroupHealth``) is shared between the DES (which records
         transfer errors and crash/recover flips into it) and the
         per-call router (which folds its breaker state and penalties
-        into scoring); both ride along only with ``faults``.  The
+        into scoring); ``recovery`` rides along only with ``faults``,
+        while ``health`` may also come alone (a straggle detector
+        tripping breakers with no injected fault) — a health-only run
+        binds an empty fault plan, leaving the schedule bit-identical
+        to a plain run.  The
         contradictory-timeline validation
         (``simulator.validate_timeline``) covers the merged
         ``scale`` + ``failures`` + ``faults`` schedule.
@@ -588,9 +621,17 @@ class Deployment:
                                   health=health)
                       if isinstance(faults, FaultPlan) else faults)
             timeline.extend(fstate.control_events())
-        elif recovery is not None or health is not None:
-            raise ValueError("recovery=/health= ride along with a "
-                             "faults= plan; pass one")
+        elif health is not None:
+            # health-ALONE runs (e.g. a straggle detector tripping
+            # breakers with no injected fault) bind an empty plan: its
+            # link() is always None, so the schedule is bit-identical
+            # to a plain run — only the breaker state is live.
+            from repro.serving.faults import FaultPlan
+            fstate = FaultPlan().bind(self.num_groups, recovery=recovery,
+                                      health=health)
+        elif recovery is not None:
+            raise ValueError("recovery= rides along with a faults= "
+                             "plan; pass one")
         replicas = cluster.build_replicas()
         if reference:
             for rep in replicas:
@@ -604,7 +645,8 @@ class Deployment:
             start_ineligible=sorted(self._reserve),
             events=events,
             kv=self.spec.kv_model(),
-            faults=fstate)
+            faults=fstate,
+            fabric=self.spec.make_topology())
 
     # ------------------------------------------------------------------ #
     def launch(self, cfg=None, params=None) -> "LaunchedDeployment":
@@ -672,6 +714,13 @@ class LaunchedDeployment:
         self._actions: List[Dict[str, Any]] = []
         self._chaos = None              # bound FaultState (see inject)
         self._store = None              # CheckpointStore under recovery
+        # live accounting twin of the DES fabric: counts real bytes per
+        # channel and priority class (None without spec.fabric)
+        self._fabric = None
+        topo = spec.make_topology()
+        if topo is not None:
+            from repro.serving.fabric import LiveFabric
+            self._fabric = LiveFabric(topo, len(spec.groups))
         self.kv_retries = 0             # transparent shard retransmits
         self.kv_corrupted = 0           # shards delivered corrupted
         self.reprefills = 0             # handoffs re-prefilled on decode
@@ -798,6 +847,31 @@ class LaunchedDeployment:
         self._actions = planned
         return self
 
+    def _live_chan(self, src: int, dst: int):
+        """The live fabric channel between two ENGINE indices, or None
+        — without a fabric, for same-group/same-island hops, and for
+        autoscaled engines past the founding groups (the topology only
+        maps the groups the spec declared)."""
+        fab = self._fabric
+        if fab is None:
+            return None
+        n = len(self.spec.groups)
+        if not (0 <= src < n and 0 <= dst < n):
+            return None
+        return fab.channel(src, dst)
+
+    def _account_ckpt(self, gi: int, nbytes: int) -> None:
+        """CheckpointStore ``on_store`` hook: snapshot bytes ride the
+        fabric to the host as bulk traffic (skipped for autoscaled
+        engines and host-less topologies — accounting must never make
+        a checkpoint fail)."""
+        fab = self._fabric
+        if fab is None or not (0 <= gi < len(self.spec.groups)):
+            return
+        if fab.topo.host_island is None:
+            return
+        fab.account_ckpt(gi, int(nbytes))
+
     def _pick_engine(self):
         """The routable engine with the most free slots (host view;
         conservative between syncs), or None when every one is full."""
@@ -826,6 +900,10 @@ class LaunchedDeployment:
             while True:
                 tgt = self._pick_engine()
                 if tgt is not None and tgt.import_session(req, h, clk()):
+                    ch = self._live_chan(g, self.engines.index(tgt))
+                    if ch is not None:
+                        from repro.serving.fabric import BULK
+                        ch.account(int(h["kv_bytes"]), BULK)
                     break
                 # every routable engine full: drain one decode step
                 # everywhere and retry — a slot frees in finitely many
@@ -862,7 +940,10 @@ class LaunchedDeployment:
             now = clk()
             ticks += 1
             if self._store is not None:
-                self._store.poll(self.engines, now)
+                self._store.poll(self.engines, now,
+                                 on_store=(self._account_ckpt
+                                           if self._fabric is not None
+                                           else None))
             while pending and pending[0].arrival <= now:
                 eng = self._pick_engine()
                 if eng is None:
@@ -932,6 +1013,8 @@ class LaunchedDeployment:
                 recovered_sessions=self.recovered_sessions,
                 checkpoints=(self._store.checkpoints
                              if self._store is not None else 0))
+        if self._fabric is not None:
+            out["fabric"] = self._fabric.stats()
         return out
 
     # ------------------------------------------------------------------ #
@@ -976,21 +1059,34 @@ class LaunchedDeployment:
         if self.spec.kv_chunks > 1:
             link = (self._chaos.live_link(0, 1)
                     if self._chaos is not None else None)
+            # live fabric channel prefill -> decode: the handoff's
+            # shards are counted as URGENT (decode-blocking) traffic.
+            # The channel wraps OUTSIDE the chaos link, so it counts
+            # each shard as delivered once (retransmits inside the
+            # link are the link's own accounting, link.retries).
+            fabch = self._live_chan(0, 1)
             for req in ordered:
-                if link is None:
+                if link is None and fabch is None:
                     gen = self._counted(
                         pre.prefill_handoff_stream(req, clk()))
                     while not dec.admit_handoff_stream(req, gen, clk()):
                         dec.step(clk())     # drain a slot, retry
                     continue
-                # chaos-injected handoff: checksummed typed shards
-                # through the flaky channel.  Transient failures
-                # retransmit inside the link; a shard that exhausts
-                # its retries arrives corrupted and the receiver's
-                # checksum trips.
+                # chaos-injected and/or fabric-accounted handoff:
+                # typed shards (checksummed only under chaos) through
+                # the flaky channel.  Transient failures retransmit
+                # inside the link; a shard that exhausts its retries
+                # arrives corrupted and the receiver's checksum trips.
+                from repro.serving.fabric import URGENT
                 from repro.serving.kvpool import ShardChecksumError
-                shards = link.wrap(self._counted_native(
-                    pre.sessions.stream(req, clk(), checksum=True)))
+                shards = self._counted_native(
+                    pre.sessions.stream(req, clk(),
+                                        checksum=link is not None,
+                                        klass=URGENT))
+                if link is not None:
+                    shards = link.wrap(shards)
+                if fabch is not None:
+                    shards = fabch.wrap(shards)
                 try:
                     while not dec.sessions.receive(req, shards, clk()):
                         dec.step(clk())     # drain a slot, retry
@@ -1007,11 +1103,15 @@ class LaunchedDeployment:
                 self.kv_retries = link.retries
                 self.kv_corrupted = link.corrupted
         else:
+            fabch = self._live_chan(0, 1)
             handoffs: List[Tuple[Any, Dict]] = []
             for req in ordered:
                 h = pre.prefill_handoff(req, clk())
                 if not h["done"]:
                     self.wire_bytes += h["kv_bytes"]
+                    if fabch is not None:
+                        from repro.serving.fabric import URGENT
+                        fabch.account(int(h["kv_bytes"]), URGENT)
                     handoffs.append((req, h))
             while handoffs:
                 while handoffs and dec.admit_handoff(
@@ -1029,4 +1129,6 @@ class LaunchedDeployment:
             out.update(kv_retries=self.kv_retries,
                        kv_corrupted=self.kv_corrupted,
                        reprefills=self.reprefills)
+        if self._fabric is not None:
+            out["fabric"] = self._fabric.stats()
         return out

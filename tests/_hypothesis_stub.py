@@ -60,6 +60,23 @@ class strategies:
         return _Strategy(lambda rng: rng.uniform(min_value, max_value),
                          [min_value, max_value])
 
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda rng: tuple(s.draw(rng) for s in elements),
+            [tuple(s.edge_cases[0] for s in elements),
+             tuple(s.edge_cases[-1] for s in elements)])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        lo = max(min_size, 1)
+        return _Strategy(draw, [[elements.edge_cases[0]] * lo,
+                                [elements.edge_cases[-1]] * lo])
+
 
 def given(**strats: _Strategy):
     """Run the test on edge cases + seeded-random draws (no shrinking)."""
